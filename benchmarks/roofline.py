@@ -1,0 +1,70 @@
+"""Roofline aggregation: reads experiments/dryrun/*.json (written by
+``python -m repro.launch.dryrun``) and emits the per-(arch x shape) table
+for EXPERIMENTS.md §Roofline. Single-pod (16x16) only, per the brief."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+V5E_HBM_GIB = 16.0
+
+
+def load_reports(mesh: str = "16x16"):
+    reports = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(path))
+        if r.get("mesh") == mesh:
+            reports.append(r)
+    return reports
+
+
+def table_rows(reports):
+    rows = []
+    for r in reports:
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": r["reason"]})
+            continue
+        rl = r["roofline"]
+        args_gib = r["memory"]["argument_bytes_per_device"] / 2**30
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+            "t_compute_s": rl["t_compute_s"],
+            "t_memory_s": rl["t_memory_s"],
+            "t_collective_s": rl["t_collective_s"],
+            "dominant": rl["dominant"],
+            "model_flops": r["model_flops"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "args_gib_per_device": args_gib,
+            "fits_v5e_16g_weights": args_gib < V5E_HBM_GIB,
+        })
+    return rows
+
+
+def main():
+    rows = table_rows(load_reports())
+    for row in rows:
+        if "skipped" in row:
+            emit(f"roofline_{row['arch']}_{row['shape']}", 0.0,
+                 f"SKIP:{row['skipped']}")
+            continue
+        emit(f"roofline_{row['arch']}_{row['shape']}",
+             row["t_compute_s"] * 1e6,
+             f"dominant={row['dominant']};"
+             f"tc={row['t_compute_s']:.3g};tm={row['t_memory_s']:.3g};"
+             f"tx={row['t_collective_s']:.3g};"
+             f"useful={row['useful_flops_ratio']:.2f};"
+             f"args_gib={row['args_gib_per_device']:.2f}")
+    save_result("roofline_table", rows)
+    if not rows:
+        print("# (no dry-run reports found — run python -m repro.launch.dryrun)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

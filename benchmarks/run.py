@@ -1,0 +1,28 @@
+"""Benchmark driver — one section per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    from benchmarks import (e2lm_scaling, fig7_iterations, kernel_bench,
+                            roofline, table23_notmnist, table45_mnist)
+    for mod in (kernel_bench, e2lm_scaling, table45_mnist, table23_notmnist,
+                fig7_iterations, roofline):
+        try:
+            mod.main()
+        except Exception as e:  # keep the suite going; report at the end
+            failures.append((mod.__name__, e))
+            traceback.print_exc()
+    if failures:
+        for name, e in failures:
+            print(f"FAILED,{name},{type(e).__name__}:{e}")
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end driver — distributed-averaging training of a transformer LM.
+
+The paper's technique at modern scale: k members train a dense GQA decoder
+on disjoint synthetic token streams with ZERO communication, weights are
+averaged every tau steps (tau=0 -> the paper's single final average), and
+the averaged model is evaluated against every member.
+
+Default runs a small model in a couple of minutes on CPU. The full
+end-to-end config (~100M params, a few hundred steps) is:
+
+  PYTHONPATH=src python examples/distributed_averaging_lm.py --full
+
+which maps onto the same launcher the production mesh uses (the multi-pod
+dry-run lowers exactly this member-stacked step for 2x16x16).
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 200 steps (hours on CPU; sized for "
+                         "real accelerators)")
+    ap.add_argument("--non-iid", action="store_true",
+                    help="disjoint data domains per member — reproduces the "
+                         "paper's not-MNIST degradation at LM scale")
+    args = ap.parse_args()
+
+    if args.full:
+        argv = ["--preset", "lm100m", "--steps", "200", "--members", "2",
+                "--batch", "8", "--seq", "512", "--avg-period", "50",
+                "--log-every", "10"]
+    else:
+        argv = ["--arch", "qwen3_8b", "--reduced", "--steps", "40",
+                "--members", "2", "--batch", "4", "--seq", "128",
+                "--avg-period", "10", "--log-every", "5"]
+    if args.non_iid:
+        argv.append("--non-iid")
+
+    result = train_launcher.main(argv)
+    avg, members = result["eval_averaged"], result["eval_members"]
+    print("\n=== distributed averaging result ===")
+    print(f"averaged model loss: {avg:.4f}")
+    print(f"member losses:       {['%.4f' % m for m in members]}")
+    if avg <= min(members) + 0.05:
+        print("-> averaging preserved (or improved) member quality, "
+              "with zero inter-member traffic during training")
+    else:
+        print("-> averaging degraded quality — expected under --non-iid "
+              "(the paper's Table 2/3 failure mode)")
+
+
+if __name__ == "__main__":
+    main()

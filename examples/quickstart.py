@@ -1,0 +1,50 @@
+"""Quickstart — the paper in one script.
+
+Distributed Averaging CNN-ELM (Algorithm 2) on the synthetic extended-MNIST
+analogue: partition the data onto k 'machines', train a CNN-ELM on each
+(Map), average every weight (Reduce), and compare against the monolithic
+model. Runs in ~1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import get_config
+from repro.core import cnn_elm
+from repro.data.partition import partition_iid
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+
+def main():
+    cfg = get_config("cnn_elm_6c12c")          # the paper's Table-4 model
+    ds = make_extended_mnist(n_per_class=100)  # 3x noise-extended, IID
+    train, test = ds.split(n_test=500)
+
+    k = 4
+    parts = partition_iid(train.x, train.y, k)
+    print(f"{len(train.x)} training examples -> {k} machines "
+          f"x {len(parts[0].x)} examples")
+
+    members, averaged = cnn_elm.distributed_cnn_elm(
+        cfg, parts, jax.random.PRNGKey(0),
+        epochs=1, lr_schedule=dynamic_paper(0.05), batch_size=200)
+
+    mono = cnn_elm.train_member(
+        cfg, cnn.init_params(cfg, jax.random.PRNGKey(0)),
+        partition_iid(train.x, train.y, 1)[0],
+        epochs=1, lr_schedule=dynamic_paper(0.05), batch_size=200)
+
+    print(f"monolithic (1 machine):  "
+          f"{cnn_elm.evaluate(cfg, mono, test.x, test.y):.4f}")
+    for i, m in enumerate(members):
+        print(f"member {i+1}/{k}:            "
+              f"{cnn_elm.evaluate(cfg, m, test.x, test.y):.4f}")
+    print(f"weight-averaged ({k}):     "
+          f"{cnn_elm.evaluate(cfg, averaged, test.x, test.y):.4f}  <- the paper's claim:"
+          " ~= monolithic, at 1/k the wall time per machine")
+
+
+if __name__ == "__main__":
+    main()

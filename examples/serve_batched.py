@@ -1,0 +1,19 @@
+"""Batched serving of an attention-free LM — the decode path that makes
+``long_500k`` tractable (O(1)-in-sequence recurrent state).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+
+def main():
+    print("== rwkv6 (SSM state decode, the long_500k path) ==")
+    serve.main(["--arch", "rwkv6_3b", "--reduced", "--batch", "4",
+                "--prompt-len", "64", "--gen", "24"])
+    print("\n== zamba2 hybrid (SSM + shared-attention ring buffer) ==")
+    serve.main(["--arch", "zamba2_1p2b", "--reduced", "--batch", "2",
+                "--prompt-len", "64", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""§Perf hillclimb driver — measures sharding/layout variants of the three
+picked (arch x shape) pairs via the dry-run probe pipeline and records
+hypothesis -> change -> before -> after rows.
+
+  PYTHONPATH=src python scripts/hillclimb.py --pair rwkv --variant B1 ...
+  PYTHONPATH=src python scripts/hillclimb.py --list
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import sys       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "hillclimb")
+
+# variant registry: (arch, shape, rules_override, cfg_override, note)
+VARIANTS = {
+    # ---- pick B: rwkv6_3b x train_4k (worst roofline fraction) ----------
+    "B0-paper-scan": ("rwkv6_3b", "train_4k", None, {"rwkv_mode": "scan"},
+                      "paper-faithful exact recurrence (per-step scan); "
+                      "probe FLOPs under-count the wkv inner while loop — "
+                      "recorded for completeness"),
+    "B0-chunked": ("rwkv6_3b", "train_4k", None, None,
+                   "baseline: chunked WKV (MXU form), default sharding"),
+    "B1-no-tp": ("rwkv6_3b", "train_4k", {"heads": ()}, None,
+                 "disable tensor parallelism on time-mix D x D weights "
+                 "(hypothesis: reshape 2560->40x64 under 16-way sharding "
+                 "forces per-layer all-gathers)"),
+    "B2-no-tp-fsdp": ("rwkv6_3b", "train_4k",
+                      {"heads": (), "layers": ("data",)}, None,
+                      "B1 + FSDP over the stacked-layer dim (32%16==0) to "
+                      "recover the memory lost to replication"),
+    "B3-head-pad48": ("rwkv6_3b", "train_4k", None, {"rwkv_head_pad_to": 16},
+                      "pad heads 40->48 (zero columns, provably exact): the "
+                      "head reshape divides the 16-way model axis, removing "
+                      "per-layer all-gather resharding while KEEPING tensor "
+                      "parallelism (+20% time-mix width as the price)"),
+    "B3-head-pad48-32k": ("rwkv6_3b", "prefill_32k", None,
+                          {"rwkv_head_pad_to": 16},
+                          "head-pad fix applied to the prefill shape"),
+    "B4-pin-dataflow": ("rwkv6_3b", "train_4k", None,
+                        {"rwkv_head_pad_to": 16},
+                        "B3 + explicit batch-only constraints on the time-mix "
+                        "residual stream / lerp outputs and heads-sharded "
+                        "constraints on r,k,v,g (HLO showed 24x 640MiB "
+                        "all-gathers of (B,S,D) chosen by SPMD propagation "
+                        "in backward/remat)"),
+    "B4-noheadpad": ("rwkv6_3b", "train_4k", None, None,
+                     "dataflow pins WITHOUT head padding (isolate the two "
+                     "effects; heads 40 don't divide 16 so r/k/v/g "
+                     "constraints fall back to replicated)"),
+    # ---- pick C: olmoe_1b_7b x train_4k (most collective-bound) ---------
+    "C0": ("olmoe_1b_7b", "train_4k", None, None, "baseline"),
+    "C1-fsdp-ff": ("olmoe_1b_7b", "train_4k", {"ff": ("data",)}, None,
+                   "FSDP: expert ff dim sharded over data (weights gathered "
+                   "on use, opt state 16x smaller)"),
+    "C2-combine-batch": ("olmoe_1b_7b", "train_4k", None,
+                         {"moe_combine_sharding": "batch"},
+                         "replicate expert outputs before combine-gather "
+                         "(one planned all-gather instead of per-gather "
+                         "resharding)"),
+    "C3-combine-none": ("olmoe_1b_7b", "train_4k", None,
+                        {"moe_combine_sharding": "none"},
+                        "drop the expert-dim constraint on expert outputs; "
+                        "let SPMD choose"),
+    # ---- bonus D: minicpm_2b x prefill_32k (worst memory-bound prefill) --
+    "D0": ("minicpm_2b", "prefill_32k", None, None,
+           "baseline: tied-embedding logits (B,S,122753) f32 replicate over "
+           "model because 122753 %% 16 != 0"),
+    "D1-vocab-pad": ("minicpm_2b", "prefill_32k", None, {"vocab_pad_to": 16},
+                     "pad vocab 122753->122768 (masked logits, provably "
+                     "exact) so the logits buffer shards over model"),
+    "D2-vocab-pad-train": ("minicpm_2b", "train_4k", None,
+                           {"vocab_pad_to": 16},
+                           "same fix where it should bite: TRAIN computes "
+                           "full-sequence logits (256x4096x122753 f32)"),
+    "D2-base-train": ("minicpm_2b", "train_4k", None, None,
+                      "train_4k baseline for D2"),
+    # ---- pick A: qwen3_moe_235b x train_4k (paper-representative) -------
+    "A0": ("qwen3_moe_235b_a22b", "train_4k", None, None,
+           "baseline (does NOT fit HBM: 137 GiB/device args)"),
+    "A1-fsdp-ff": ("qwen3_moe_235b_a22b", "train_4k", {"ff": ("data",)},
+                   None, "FSDP expert ff over data: args/device /16"),
+    "A2-fsdp-combine": ("qwen3_moe_235b_a22b", "train_4k", {"ff": ("data",)},
+                        {"moe_combine_sharding": "batch"},
+                        "A1 + pick-C's planned-all-gather combine fix"),
+}
+
+
+def run_variant(name, with_memory=True):
+    arch, shape_name, rules, cfg_over, note = VARIANTS[name]
+    from repro.configs.base import INPUT_SHAPES, get_config, replace
+    shape = INPUT_SHAPES[shape_name]
+    cfg = dryrun._shape_cfg(get_config(arch), shape)
+    if cfg_over:
+        cfg = replace(cfg, **cfg_over)
+    mesh = dryrun.make_production_mesh(multi_pod=False)
+    chips = 256
+
+    mem_report = {}
+    if with_memory:
+        lowered = dryrun.build_lowered(cfg, shape, mesh, multi_pod=False,
+                                       rules_override=rules)
+        compiled = lowered.compile()
+        m = compiled.memory_analysis()
+        mem_report = {
+            "argument_bytes_per_device": m.argument_size_in_bytes,
+            "temp_bytes_upper_bound": m.temp_size_in_bytes,
+        }
+
+    # probe-corrected per-layer costs under the variant rules
+    orig = dryrun.build_lowered
+
+    def patched(c, s, me, **kw):
+        kw.setdefault("rules_override", rules)
+        return orig(c, s, me, **kw)
+
+    dryrun.build_lowered = patched
+    try:
+        cost, _ = dryrun.probe_costs(cfg, shape, mesh, "adamw")
+    finally:
+        dryrun.build_lowered = orig
+
+    from repro.launch import hlo_analysis
+    terms = hlo_analysis.roofline_terms(cost["flops_pd"] * chips,
+                                        cost["bytes_pd"] * chips,
+                                        cost["coll_per_chip"], chips)
+    report = {"variant": name, "arch": arch, "shape": shape_name,
+              "note": note, "rules_override": rules and
+              {k: list(map(str, v)) for k, v in rules.items()},
+              "cfg_override": cfg_over,
+              "memory": mem_report, "cost": cost, "roofline": terms}
+    os.makedirs(OUT, exist_ok=True)
+    json.dump(report, open(os.path.join(OUT, f"{name}.json"), "w"), indent=1)
+    t = terms
+    print(f"[{name}] tc={t['t_compute_s']:.3g}s tm={t['t_memory_s']:.3g}s "
+          f"tx={t['t_collective_s']:.3g}s dom={t['dominant']} "
+          f"args={mem_report.get('argument_bytes_per_device', 0)/2**30:.1f}GiB",
+          flush=True)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--no-memory", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for k, v in VARIANTS.items():
+            print(f"{k:20s} {v[0]} x {v[1]} — {v[4]}")
+        return
+    for name in (args.variant or list(VARIANTS)):
+        try:
+            run_variant(name, with_memory=not args.no_memory)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"[{name}] FAILED: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

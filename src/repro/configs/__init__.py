@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ArchConfig, InputShape,
+                                get_config, get_reduced_config, replace,
+                                supported_shapes)

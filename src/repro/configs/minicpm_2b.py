@@ -1,0 +1,18 @@
+"""MiniCPM-2B — dense llama-like decoder trained with the WSD schedule
+[arXiv:2404.06395]. Tied embeddings; vocab 122753 is NOT divisible by the
+model axis (16) — the sharding resolver replicates the vocab dim (the
+documented fallback in repro.distributed.sharding)."""
+from repro.configs.base import ArchConfig, replace
+
+CONFIG = ArchConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36, head_dim=64,
+    d_ff=5760, vocab_size=122753, tie_embeddings=True,
+    source="arXiv:2404.06395",
+)
+
+
+def reduced() -> ArchConfig:
+    return replace(CONFIG, name="minicpm-reduced", num_layers=2,
+                   d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+                   d_ff=512, vocab_size=513)  # odd vocab on purpose (fallback path)

@@ -1,0 +1,55 @@
+"""Weight averaging — the paper's Reduce step (Alg. 1 line 11, Alg. 2
+lines 18-20): Ŵ = 1/k Σ Wᵢ for every parameter (CNN kernels, biases, ELM β,
+and — in this framework — any backbone pytree).
+
+Three deployment flavours:
+* ``average_trees``       — host-level list-of-members mean.
+* ``average_member_dim``  — members stacked on a leading dim (the multi-pod
+                            layout: member dim sharded over the 'pod' axis;
+                            the mean lowers to one all-reduce across pods).
+* ``pmean_members``       — inside shard_map/pjit over a named axis.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def average_trees(members: Sequence):
+    k = float(len(members))
+    out = members[0]
+    for m in members[1:]:
+        out = jax.tree.map(lambda a, b: a + b.astype(a.dtype), out, m)
+    return jax.tree.map(lambda a: (a.astype(jnp.float32) / k).astype(a.dtype), out)
+
+
+def weighted_average_trees(members: Sequence, weights: Sequence[float]):
+    """Beyond-paper: shard-size-weighted mean (exact expectation when
+    partitions are unequal — see EXPERIMENTS.md §Perf)."""
+    total = float(sum(weights))
+    scaled = [jax.tree.map(lambda a, w=w: a.astype(jnp.float32) * (w / total), m)
+              for m, w in zip(members, weights)]
+    out = scaled[0]
+    for m in scaled[1:]:
+        out = jax.tree.map(jnp.add, out, m)
+    ref = members[0]
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), out, ref)
+
+
+def average_member_dim(stacked_params):
+    """Mean over the leading member dim of every leaf (multi-pod Reduce)."""
+    return jax.tree.map(
+        lambda a: jnp.mean(a.astype(jnp.float32), axis=0).astype(a.dtype),
+        stacked_params)
+
+
+def broadcast_member_dim(params, k: int):
+    """Replicate averaged params back to all members (next round's init)."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (k,) + a.shape), params)
+
+
+def pmean_members(params, axis_name: str):
+    return jax.tree.map(lambda a: jax.lax.pmean(a, axis_name), params)

@@ -1,0 +1,139 @@
+"""Distributed Averaging CNN-ELM — the paper's Algorithm 2, faithful.
+
+One member (machine i):
+  for epoch j in 1..e:
+      reset ΣU = 0, ΣV = 0                               (line 7)
+      for batch p in partition i:
+          H = CNN features of batch (optimal-tanh applied) (line 9)
+          ΣU += HᵀH ; ΣV += HᵀT                          (lines 10-11)
+          β = (I/λ + ΣU)⁻¹ ΣV                            (line 12)
+          backprop ELM error J = ½||Hβ−T||² into CNN      (line 13)
+          W ← W − α ∇W J ;  b ← b − α ∇b J               (line 14)
+
+Note the faithful quirk: β on line 12 is solved from the *running* sums of
+the current epoch, so early-epoch batches see a β fitted on little data.
+At e=0 (Tables 2/4) no SGD happens at all: one pass accumulates U,V and β
+is solved once — pure CNN-as-random-feature ELM.
+
+Reduce (lines 18-20): average every Wᵢ, bᵢ, βᵢ across the k members.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elm
+from repro.core.averaging import average_trees
+from repro.data.partition import Partition, batches
+from repro.data.synthetic import one_hot
+from repro.models import cnn
+
+
+@dataclass
+class CNNELMModel:
+    cnn_params: dict
+    beta: jax.Array          # (F, C)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _batch_stats(cfg, cnn_params, x, t):
+    h = cnn.features(cfg, cnn_params, x)
+    return elm.batch_stats(h, t)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _sgd_step(cfg, cnn_params, beta, x, t, lr):
+    """Line 13-14: one SGD step on the ELM least-squares error."""
+    def loss(p):
+        h = cnn.features(cfg, p, x)
+        return elm.elm_loss(h, beta, t)
+
+    val, grads = jax.value_and_grad(loss)(cnn_params)
+    new = jax.tree.map(lambda p, g: p - lr * g, cnn_params, grads)
+    return new, val
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _scores(cfg, cnn_params, beta, x):
+    h = cnn.features(cfg, cnn_params, x)
+    return elm.predict(h, beta)
+
+
+def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
+                 lr_schedule, batch_size: int, seed: int = 0) -> CNNELMModel:
+    """Algorithm 2 inner loop for one machine. epochs=0 -> ELM-only pass."""
+    F = cnn.feature_dim(cfg)
+    C = cfg.num_classes
+
+    def one_pass(params, solve_each_batch: bool, lr: Optional[float]):
+        stats = elm.zero_stats(F, C)
+        beta = jnp.zeros((F, C), jnp.float32)
+        for x, y in batches(part, batch_size, seed=seed):
+            t = jnp.asarray(one_hot(y, C))
+            xj = jnp.asarray(x)
+            stats = elm.add_stats(stats, _batch_stats(cfg, params, xj, t))
+            if solve_each_batch:
+                beta = elm.solve_beta(stats, cfg.elm_lambda)
+                params, _ = _sgd_step(cfg, params, beta, xj, t,
+                                      jnp.asarray(lr, jnp.float32))
+        return params, stats
+
+    if epochs == 0:
+        cnn_params, stats = one_pass(cnn_params, False, None)
+        return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
+
+    stats = None
+    for e in range(epochs):
+        cnn_params, stats = one_pass(cnn_params, True, float(lr_schedule(e)))
+    return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
+
+
+def average_models(models: Sequence[CNNELMModel]) -> CNNELMModel:
+    """Reduce: lines 18-20 — average CNN weights, biases AND β."""
+    avg_cnn = average_trees([m.cnn_params for m in models])
+    avg_beta = average_trees([m.beta for m in models])
+    return CNNELMModel(avg_cnn, avg_beta)
+
+
+def distributed_cnn_elm(cfg, partitions: List[Partition], key, *,
+                        epochs: int, lr_schedule, batch_size: int):
+    """Full Algorithm 2: same init for all machines (line 3), independent
+    training (Map), weight averaging (Reduce). Returns (members, averaged)."""
+    init = cnn.init_params(cfg, key)
+    members = [train_member(cfg, init, part, epochs=epochs,
+                            lr_schedule=lr_schedule, batch_size=batch_size,
+                            seed=1000 + i)
+               for i, part in enumerate(partitions)]
+    return members, average_models(members)
+
+
+def evaluate(cfg, model: CNNELMModel, x: np.ndarray, y: np.ndarray,
+             batch_size: int = 512) -> float:
+    correct, total = 0, 0
+    for i in range(0, len(x), batch_size):
+        s = _scores(cfg, model.cnn_params, model.beta, jnp.asarray(x[i:i + batch_size]))
+        correct += int(jnp.sum(jnp.argmax(s, -1) == jnp.asarray(y[i:i + batch_size])))
+        total += len(y[i:i + batch_size])
+    return correct / total
+
+
+def kappa(cfg, model: CNNELMModel, x, y, batch_size: int = 512):
+    """Cohen's kappa (the paper's secondary metric, Table 1c)."""
+    preds = []
+    for i in range(0, len(x), batch_size):
+        s = _scores(cfg, model.cnn_params, model.beta, jnp.asarray(x[i:i + batch_size]))
+        preds.append(np.asarray(jnp.argmax(s, -1)))
+    p = np.concatenate(preds)
+    C = cfg.num_classes
+    cm = np.zeros((C, C))
+    for a, b in zip(y, p):
+        cm[a, b] += 1
+    n = cm.sum()
+    po = np.trace(cm) / n
+    pe = float((cm.sum(0) * cm.sum(1)).sum()) / (n * n)
+    return (po - pe) / (1 - pe + 1e-12)

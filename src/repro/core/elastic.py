@@ -1,0 +1,90 @@
+"""Elastic membership — the 'Elastic' in E²LM, applied at classifier level.
+
+Big-data clusters gain and lose workers; the paper's MapReduce framing
+makes both operations natural, and this module makes them first-class:
+
+* ``join``   — a new member starts from the current average (the same
+  rule as Alg. 2 line 3's shared init, applied mid-training), plus its
+  ELM stats start at zero and simply ADD to the reduce (E²LM is exactly
+  decomposable, so late stats never corrupt the head).
+* ``leave``  — a departing member contributes its weights to one final
+  weighted average and its accumulated (U, V) permanently (no un-learning
+  needed: the head solve is stateless given the stats).
+* ``reduce`` — shard-size-weighted weight average + exact stats merge.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+
+from repro.core import elm
+from repro.core.averaging import weighted_average_trees
+
+
+@dataclass
+class Member:
+    params: object
+    steps: float = 0.0                      # local work — averaging weight
+    stats: Optional[elm.ELMStats] = None    # E²LM sufficient statistics
+
+
+@dataclass
+class ElasticGroup:
+    members: Dict[str, Member] = field(default_factory=dict)
+    retired_params: list = field(default_factory=list)   # (params, weight)
+    retired_stats: list = field(default_factory=list)
+
+    def join(self, name: str, init_params=None):
+        """New member starts from the average of the living members (or an
+        explicit init when the group is empty)."""
+        if self.members:
+            params = self.reduce_params()
+        elif init_params is not None:
+            params = init_params
+        else:
+            raise ValueError("first member needs init_params")
+        self.members[name] = Member(params=params)
+        return self.members[name]
+
+    def leave(self, name: str):
+        m = self.members.pop(name)
+        if m.steps > 0:
+            self.retired_params.append((m.params, m.steps))
+        if m.stats is not None:
+            self.retired_stats.append(m.stats)
+        return m
+
+    def record_step(self, name: str, params, n: float = 1.0):
+        m = self.members[name]
+        m.params = params
+        m.steps += n
+
+    def record_stats(self, name: str, stats: elm.ELMStats):
+        m = self.members[name]
+        m.stats = stats if m.stats is None else elm.add_stats(m.stats, stats)
+
+    def reduce_params(self):
+        """Shard-size-weighted average over living + retired members."""
+        entries = [(m.params, max(m.steps, 1e-9))
+                   for m in self.members.values()]
+        entries += self.retired_params
+        trees, weights = zip(*entries)
+        return weighted_average_trees(list(trees), list(weights))
+
+    def reduce_stats(self) -> Optional[elm.ELMStats]:
+        all_stats = [m.stats for m in self.members.values()
+                     if m.stats is not None] + self.retired_stats
+        if not all_stats:
+            return None
+        out = all_stats[0]
+        for s in all_stats[1:]:
+            out = elm.add_stats(out, s)
+        return out
+
+    def solve_head(self, lam: float):
+        stats = self.reduce_stats()
+        if stats is None:
+            raise ValueError("no ELM stats recorded")
+        return elm.solve_beta(stats, lam)

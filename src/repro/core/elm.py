@@ -1,0 +1,72 @@
+"""Extreme Learning Machine core (paper §2.2, Eq. 1-5).
+
+The ELM readout solves the ridge-regularised least squares
+    β = (I/λ + UᵀU)⁻¹ V,   U = HᵀH,  V = HᵀT            (Eq. 2-5)
+where H is the hidden-feature matrix (here: the CNN's last pooled map, or
+any backbone's features) after the paper's optimal-tanh activation
+1.7159·tanh(2/3·H).
+
+Because U and V are sums over rows of H, ELM training is exactly
+decomposable over data shards — the E²LM MapReduce (repro.core.e2lm).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.elm_stats import ops as stats_ops
+from repro.layers.norms import optimal_tanh
+
+
+class ELMStats(NamedTuple):
+    """Sufficient statistics of one (partial) dataset."""
+    u: jax.Array  # (L, L) f32
+    v: jax.Array  # (L, C) f32
+    n: jax.Array  # () f32 — row count (for weighted reduce bookkeeping)
+
+
+def zero_stats(num_features: int, num_classes: int) -> ELMStats:
+    return ELMStats(jnp.zeros((num_features, num_features), jnp.float32),
+                    jnp.zeros((num_features, num_classes), jnp.float32),
+                    jnp.zeros((), jnp.float32))
+
+
+def batch_stats(h, t, *, activation: bool = True,
+                use_pallas: bool = False) -> ELMStats:
+    """Map step: stats of one batch. h: (n, L) raw features, t: (n, C)."""
+    if activation:
+        h = optimal_tanh(h)
+    u, v = stats_ops.elm_stats(h, t, use_pallas=use_pallas)
+    return ELMStats(u, v, jnp.asarray(h.shape[0], jnp.float32))
+
+
+def add_stats(a: ELMStats, b: ELMStats) -> ELMStats:
+    return ELMStats(a.u + b.u, a.v + b.v, a.n + b.n)
+
+
+def solve_beta(stats: ELMStats, lam: float) -> jax.Array:
+    """Reduce step, Eq. 5: β = (I/λ + U)⁻¹ V via Cholesky (SPD for λ>0)."""
+    L = stats.u.shape[0]
+    a = stats.u + jnp.eye(L, dtype=jnp.float32) / lam
+    cho = jax.scipy.linalg.cho_factor(a)
+    return jax.scipy.linalg.cho_solve(cho, stats.v)
+
+
+def elm_loss(h, beta, t, *, activation: bool = True):
+    """Paper Eq. 16: J = 1/2 ||H(z)β − T||² (mean over batch)."""
+    if activation:
+        h = optimal_tanh(h)
+    r = h.astype(jnp.float32) @ beta - t.astype(jnp.float32)
+    return 0.5 * jnp.mean(jnp.sum(jnp.square(r), axis=-1))
+
+
+def predict(h, beta, *, activation: bool = True):
+    if activation:
+        h = optimal_tanh(h)
+    return h.astype(jnp.float32) @ beta
+
+
+def accuracy(scores, labels):
+    return jnp.mean((jnp.argmax(scores, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,62 @@
+"""Backbone-agnostic ELM readout head (the paper's CNN-ELM integration,
+generalised to every assigned architecture — DESIGN.md §3).
+
+Any backbone exposing ``hidden_states(cfg, params, batch) -> (B, S, D)``
+(or (B, D)) can be trained with:
+  1. ``accumulate_stats``  — E²LM Map over batches (U += HᵀH, V += HᵀT);
+     under pjit with batch sharded over 'data', the sums lower to one
+     all-reduce — the Reduce phase for free.
+  2. ``elm.solve_beta``    — closed-form readout.
+  3. ``finetune_step``     — Alg. 2 lines 13-14 generalised: SGD on
+     J = ½||Hβ−T||² through the backbone.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import elm
+
+
+def _flatten_features(h):
+    return h.reshape(-1, h.shape[-1]) if h.ndim == 3 else h
+
+
+def _flatten_targets(t, num_classes):
+    t = t.reshape(-1)
+    return jax.nn.one_hot(t, num_classes, dtype=jnp.float32)
+
+
+def accumulate_stats(feature_fn: Callable, params, batch, num_classes: int,
+                     stats: elm.ELMStats | None = None) -> elm.ELMStats:
+    h = _flatten_features(feature_fn(params, batch))
+    t = _flatten_targets(batch["targets"], num_classes)
+    s = elm.batch_stats(h, t)
+    return s if stats is None else elm.add_stats(stats, s)
+
+
+def solve(stats: elm.ELMStats, lam: float):
+    return elm.solve_beta(stats, lam)
+
+
+def finetune_step(feature_fn: Callable, params, beta, batch,
+                  num_classes: int, lr):
+    """One SGD step of the backbone on the ELM least-squares error."""
+
+    def loss(p):
+        h = _flatten_features(feature_fn(p, batch))
+        t = _flatten_targets(batch["targets"], num_classes)
+        return elm.elm_loss(h, beta, t)
+
+    val, grads = jax.value_and_grad(loss)(params)
+    new = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)
+    return new, val
+
+
+def predict(feature_fn: Callable, params, beta, batch):
+    h = _flatten_features(feature_fn(params, batch))
+    return elm.predict(h, beta)

@@ -1,0 +1,58 @@
+"""SimuParallelSGD (Zinkevich et al., paper Alg. 1) and its SPMD/multi-pod
+form.
+
+Host-level (``simu_parallel_sgd``): k members, disjoint data iterators, NO
+communication until the final weight average — exactly the paper.
+``avg_period`` (τ) generalises it (beyond paper): τ=None reproduces the
+single final reduce; τ=1 degenerates to synchronous data-parallel SGD;
+intermediate τ is local-SGD/FedAvg. Recorded separately in EXPERIMENTS.md.
+
+SPMD (``make_stacked_train_step`` / ``stacked_average``): members live on a
+leading param/data dim sharded over the mesh 'pod' axis; vmap turns the
+per-member step into the Map phase (zero cross-pod collectives), and the
+Reduce is one mean over the member dim (a single cross-pod all-reduce).
+This is the production multi-pod deployment the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+from repro.core.averaging import average_trees, average_member_dim, broadcast_member_dim
+
+
+def simu_parallel_sgd(init_params, train_step: Callable, data_iters: Sequence,
+                      num_steps: int, *, avg_period: Optional[int] = None,
+                      carry_states: Optional[List] = None):
+    """train_step: (params, state, batch) -> (params, state, metrics).
+    Returns (averaged_params, member_params, metrics_history)."""
+    k = len(data_iters)
+    members = [init_params] * k
+    states = carry_states if carry_states is not None else [None] * k
+    history = []
+    for step in range(num_steps):
+        outs = [train_step(members[i], states[i], next(data_iters[i]))
+                for i in range(k)]
+        members = [o[0] for o in outs]
+        states = [o[1] for o in outs]
+        history.append([o[2] for o in outs])
+        if avg_period and (step + 1) % avg_period == 0:
+            avg = average_trees(members)
+            members = [avg] * k
+    return average_trees(members), members, history
+
+
+def make_stacked_train_step(member_step: Callable):
+    """Lift (params, opt_state, step, batch)->(params, opt_state, step, metrics)
+    over a leading member dim. The member dim is sharded over 'pod' by the
+    launcher, so the vmapped body runs as k communication-free replicas."""
+    return jax.vmap(member_step, in_axes=0, out_axes=0)
+
+
+def stacked_average(stacked_params):
+    """The multi-pod Reduce: average over the member dim, re-broadcast so
+    every pod starts the next round from the averaged weights."""
+    k = jax.tree.leaves(stacked_params)[0].shape[0]
+    avg = average_member_dim(stacked_params)
+    return broadcast_member_dim(avg, k)

@@ -1,0 +1,56 @@
+"""Polyak-Ruppert averaged SGD (Polyak & Juditsky 1992) — the paper's §2.1
+theoretical foundation, as a first-class optimizer wrapper.
+
+The paper's distributed averaging averages ACROSS machines at the end of
+training; Polyak averaging averages ALONG the trajectory of one machine.
+Combining both ('average of averages') is a beyond-paper feature: each
+member maintains its Polyak average, and the Reduce step averages those —
+strictly lower-variance than averaging the last iterates when the members
+have converged to the same basin.
+
+API: wraps any (params -> new_params) step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PolyakState(NamedTuple):
+    average: object   # pytree matching params (f32)
+    count: jax.Array  # () f32 — iterates accumulated
+
+
+def polyak_init(params, burn_in: int = 0) -> PolyakState:
+    del burn_in
+    return PolyakState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        jnp.zeros((), jnp.float32))
+
+
+def polyak_update(state: PolyakState, params, *, step=None,
+                  burn_in: int = 0) -> PolyakState:
+    """Running mean of iterates; before ``burn_in`` steps just tracks the
+    current params (standard practice: skip the transient)."""
+    active = jnp.asarray(1.0, jnp.float32)
+    if step is not None:
+        active = (jnp.asarray(step, jnp.float32) >= burn_in).astype(jnp.float32)
+    new_count = state.count + active
+    denom = jnp.maximum(new_count, 1.0)
+
+    def upd(avg, p):
+        pf = p.astype(jnp.float32)
+        mean = avg + (pf - avg) * (active / denom)
+        # before burn-in: shadow the raw params so early reads are sane
+        return jnp.where(new_count > 0, mean, pf)
+
+    return PolyakState(jax.tree.map(upd, state.average, params), new_count)
+
+
+def polyak_params(state: PolyakState, like=None):
+    """Materialise the averaged weights (cast to the dtype of ``like``)."""
+    if like is None:
+        return state.average
+    return jax.tree.map(lambda a, p: a.astype(p.dtype), state.average, like)

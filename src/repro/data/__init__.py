@@ -1,0 +1,4 @@
+from repro.data.synthetic import (SyntheticImageDataset, make_extended_mnist,
+                                  make_not_mnist, add_noise)
+from repro.data.partition import partition_iid, partition_by_class, Partition
+from repro.data.lm_data import synthetic_token_batches, TokenDatasetSpec

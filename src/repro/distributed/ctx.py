@@ -1,0 +1,39 @@
+"""Optional mesh context for in-model sharding constraints.
+
+Models call ``maybe_constrain(x, logical_spec)``; when no mesh context is
+active (CPU smoke tests) it is a no-op. Drivers that lower for the
+production mesh wrap tracing in ``use_mesh_rules`` so GSPMD gets explicit
+activation shardings at the points that matter (post-embedding, attention
+heads, MoE dispatch).
+
+NOTE: the context is read at TRACE time — drivers must not reuse a jit cache
+across different contexts (every driver in this repo builds its own jitted
+closure per (config, mesh), so this holds).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from repro.distributed import sharding
+
+_STACK = []
+
+
+@contextmanager
+def use_mesh_rules(mesh, rules=None):
+    _STACK.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def current():
+    return _STACK[-1] if _STACK else None
+
+
+def maybe_constrain(x, logical):
+    if not _STACK:
+        return x
+    mesh, rules = _STACK[-1]
+    return sharding.constrain(x, logical, mesh, rules)

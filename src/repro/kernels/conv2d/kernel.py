@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: valid convolution as im2col + blocked MXU matmul.
+
+TPU adaptation of the paper's conv hot spot (DESIGN.md §8): the GPU
+shared-memory-reuse argument (Scherer et al. 2010) becomes VMEM residency —
+each (bm x bk) patch tile and (bk x bn) kernel tile is loaded into VMEM
+once per grid step and feeds the 128x128 systolic MXU; a f32 VMEM scratch
+accumulates across the K grid dimension.
+
+The im2col patch extraction happens in ops.py (XLA handles gather/reshape
+well); the kernel itself is the blocked GEMM, grid (M/bm, N/bn, K/bk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-aligned default tiles (multiples of 128 where the operand allows)
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def blocked_matmul(x, w, *, bm: int = BM, bn: int = BN, bk: int = BK,
+                   interpret: bool = True):
+    """(M,K) @ (K,N) -> (M,N), f32 accumulation. Pads to tile multiples."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(bm, max(M, 8)), min(bn, max(N, 8)), min(bk, max(K, 8))
+    Mp, Kp, Np = (-(-M // bm)) * bm, (-(-K // bk)) * bk, (-(-N // bn)) * bn
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    nk = Kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:M, :N]

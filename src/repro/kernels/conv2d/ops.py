@@ -1,0 +1,30 @@
+"""Jitted public wrapper for the conv2d Pallas kernel.
+
+``use_pallas=True`` routes through im2col + the blocked Pallas GEMM
+(interpret mode on CPU — the kernel body runs in Python, validating the
+BlockSpec program for the TPU target). ``use_pallas=False`` is the XLA
+fallback used by CPU-bound benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import ref
+from repro.kernels.conv2d.kernel import blocked_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def conv2d_valid(x, w, *, use_pallas: bool = False):
+    """x: (B,H,W,Cin), w: (kh,kw,Cin,Cout); valid conv, stride 1."""
+    if not use_pallas:
+        return ref.conv2d_valid_ref(x, w).astype(x.dtype)
+    B, H, W, C = x.shape
+    kh, kw, _, Cout = w.shape
+    OH, OW = H - kh + 1, W - kw + 1
+    patches = ref.im2col(x, kh, kw)                  # (B*OH*OW, kh*kw*C)
+    wmat = w.reshape(kh * kw * C, Cout)
+    out = blocked_matmul(patches, wmat, interpret=True)
+    return out.reshape(B, OH, OW, Cout).astype(x.dtype)

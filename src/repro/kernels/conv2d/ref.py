@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the conv2d kernel (and the im2col decomposition)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_valid_ref(x, w):
+    """x: (B,H,W,Cin), w: (kh,kw,Cin,Cout) -> (B,H-kh+1,W-kw+1,Cout)."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def im2col(x, kh: int, kw: int):
+    """(B,H,W,C) -> (B*OH*OW, kh*kw*C) patch matrix."""
+    B, H, W, C = x.shape
+    OH, OW = H - kh + 1, W - kw + 1
+    idx_h = jnp.arange(OH)[:, None] + jnp.arange(kh)[None, :]
+    idx_w = jnp.arange(OW)[:, None] + jnp.arange(kw)[None, :]
+    patches = x[:, idx_h][:, :, :, idx_w]        # (B,OH,kh,OW,kw,C)
+    patches = patches.transpose(0, 1, 3, 2, 4, 5)  # (B,OH,OW,kh,kw,C)
+    return patches.reshape(B * OH * OW, kh * kw * C)
+
+
+def matmul_ref(x, w):
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

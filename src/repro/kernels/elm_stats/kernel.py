@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused ELM sufficient statistics.
+
+One pass over row-blocks of H computes BOTH Gram products the E²LM map
+step needs (paper Eq. 3/4):   U = HᵀH  (L x L)   and   V = HᵀT  (L x C).
+
+Fusing matters because H is the big operand (n >> L): the paper's map step
+reads each H row block from HBM once and reuses it from VMEM for the U tile
+row AND the V tile — halving HBM traffic versus two separate GEMMs (this is
+the TPU translation of the paper's 'reuse loaded data as often as possible'
+remark about GPU shared memory).
+
+Grid (i over L tiles, j over L tiles, k over n tiles); the V accumulator
+runs in the j==0 lane so every (i,k) pair touches it exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BL, BN = 128, 512  # L-tile and n(row)-tile
+
+
+def _elm_stats_kernel(h_i_ref, h_j_ref, t_ref, u_ref, v_ref,
+                      acc_u, acc_v, *, nk: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_u():
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    acc_u[...] += jnp.dot(h_i_ref[...].T, h_j_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _write_u():
+        u_ref[...] = acc_u[...]
+
+    # V lane: only while j == 0 (each (i,k) exactly once)
+    @pl.when((j == 0) & (k == 0))
+    def _zero_v():
+        acc_v[...] = jnp.zeros_like(acc_v)
+
+    @pl.when(j == 0)
+    def _acc_v():
+        acc_v[...] += jnp.dot(h_i_ref[...].T, t_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when((j == 0) & (k == nk - 1))
+    def _write_v():
+        v_ref[...] = acc_v[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bn", "interpret"))
+def elm_stats(h, t, *, bl: int = BL, bn: int = BN, interpret: bool = True):
+    """h: (n, L), t: (n, C) -> (U (L,L) f32, V (L,C) f32)."""
+    n, L = h.shape
+    n2, C = t.shape
+    assert n == n2
+    bl = min(bl, max(L, 8))
+    bn = min(bn, max(n, 8))
+    Lp, Np = (-(-L // bl)) * bl, (-(-n // bn)) * bn
+    Cp = max(C, 8)
+    hp = jnp.pad(h, ((0, Np - n), (0, Lp - L)))
+    tp = jnp.pad(t, ((0, Np - n), (0, Cp - C)))
+    nk = Np // bn
+    u, v = pl.pallas_call(
+        functools.partial(_elm_stats_kernel, nk=nk),
+        grid=(Lp // bl, Lp // bl, nk),
+        in_specs=[
+            pl.BlockSpec((bn, bl), lambda i, j, k: (k, i)),  # H rows, col-tile i
+            pl.BlockSpec((bn, bl), lambda i, j, k: (k, j)),  # H rows, col-tile j
+            pl.BlockSpec((bn, Cp), lambda i, j, k: (k, 0)),  # T rows
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, bl), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bl, Cp), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Lp, Lp), jnp.float32),
+            jax.ShapeDtypeStruct((Lp, Cp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bl, bl), jnp.float32),
+                        pltpu.VMEM((bl, Cp), jnp.float32)],
+        interpret=interpret,
+    )(hp, hp, tp)
+    return u[:L, :L], v[:L, :C]

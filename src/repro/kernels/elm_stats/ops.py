@@ -1,0 +1,17 @@
+"""Jitted wrapper: ELM sufficient statistics (U, V) from one data shard."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.elm_stats import ref
+from repro.kernels.elm_stats.kernel import elm_stats as _pallas_stats
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def elm_stats(h, t, *, use_pallas: bool = False):
+    """h: (n, L) hidden features, t: (n, C) targets -> (U, V) in f32."""
+    if use_pallas:
+        return _pallas_stats(h, t, interpret=True)
+    return ref.elm_stats_ref(h, t)

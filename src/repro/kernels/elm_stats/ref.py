@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused ELM-stats kernel (paper Eq. 3/4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def elm_stats_ref(h, t):
+    hf = h.astype(jnp.float32)
+    return hf.T @ hf, hf.T @ t.astype(jnp.float32)

@@ -1,0 +1,16 @@
+"""Jitted wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm as _pallas_rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, use_pallas: bool = False):
+    if use_pallas:
+        return _pallas_rmsnorm(x, scale, eps=eps, interpret=True)
+    return rmsnorm_ref(x, scale, eps)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle — identical math to repro.layers.norms.rms_norm."""
+from repro.layers.norms import rms_norm as rmsnorm_ref  # noqa: F401

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: sliding-window causal flash attention.
+
+This is the beyond-paper kernel that makes ``long_500k`` viable for the
+dense assigned architectures (DESIGN.md §5): compute is O(S·W) instead of
+O(S²) because the kv grid dimension only spans the ``nw = W/bk + 1`` blocks
+that can intersect the window of each query block.
+
+Online-softmax state (m, l, acc) lives in VMEM scratch and is carried
+across the kv grid dimension (TPU grids iterate minor-to-major
+sequentially, so scratch is private to each (bh, q-block) pair).
+
+The kv index map clamps negative block indices to 0 for memory safety;
+the kernel masks out-of-range blocks via the unclamped index, so clamped
+duplicates contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, bq: int, bk: int, nw: int, window: int, scale: float):
+    i = pl.program_id(1)   # q block
+    t = pl.program_id(2)   # window-relative kv block
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_block = i - (nw - 1) + t          # may be negative -> masked out
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kv_block * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (k_pos <= q_pos) & (q_pos - k_pos < window) & (kv_block >= 0)
+
+    q = q_ref[0].astype(jnp.float32)      # (bq, d)
+    k = k_ref[0].astype(jnp.float32)      # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nw - 1)
+    def _write():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bq", "bk", "interpret"))
+def swa_attention(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
+                  interpret: bool = True):
+    """q,k,v: (BH, S, d) — batch*heads flattened. Causal sliding-window
+    attention with window size ``window``. S must divide by bq and bk."""
+    BH, S, d = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    # kv blocks that can intersect a query block: the window spans
+    # (window-1) positions behind the block start plus the block itself
+    nw = (window - 1) // bk + 2
+    scale = d ** -0.5
+    grid = (BH, S // bq, nw)
+
+    def kv_index(b, i, t):
+        blk = i * (bq // bk) - (nw - 1) + t if bq == bk else i - (nw - 1) + t
+        return (b, jnp.maximum(blk, 0), 0)
+
+    return pl.pallas_call(
+        functools.partial(_swa_kernel, bq=bq, bk=bk, nw=nw,
+                          window=window, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, t: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, t: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

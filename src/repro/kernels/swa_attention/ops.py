@@ -1,0 +1,16 @@
+"""Jitted wrapper for sliding-window flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.swa_attention import ref
+from repro.kernels.swa_attention.kernel import swa_attention as _pallas_swa
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_pallas"))
+def swa_attention(q, k, v, *, window: int, use_pallas: bool = False):
+    if use_pallas:
+        return _pallas_swa(q, k, v, window=window, interpret=True)
+    return ref.swa_attention_ref(q, k, v, window=window)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for sliding-window causal attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, *, window: int):
+    """q,k,v: (BH, S, d). Causal attention restricted to the last `window`
+    positions (inclusive of self)."""
+    BH, S, d = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    i = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = (j <= i) & (i - j < window)
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,385 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production meshes, with ShapeDtypeStruct stand-ins
+(no device allocation), and extract memory/cost/collective analysis.
+
+Cost accounting strategy (verified empirically in EXPERIMENTS.md §Dry-run):
+* XLA ``cost_analysis()`` reports the PER-DEVICE program and counts
+  while/scan bodies ONCE, so the production scan-over-layers lowering
+  under-reports FLOPs/bytes/collectives by ~num_layers x.
+* The main compile therefore stays scan-based (small HLO, fast — it proves
+  lowering/sharding and yields memory_analysis), while per-layer costs come
+  from tiny UNROLLED probes at num_layers = 1 and 2 on the same mesh:
+      body  = m(2) - m(1);   full = m(1) + (L-1) * body
+  which is exact for homogeneous layer stacks. zamba2 (hybrid) gets a third
+  probe to separate the shared-attention block from the mamba body.
+* CPU memory_analysis caveat: the CPU backend's buffer assignment lacks the
+  TPU memory-minimizing scheduler, so temp_size is an UPPER bound (sum-like,
+  not peak). argument/output sizes are exact per-device footprints.
+
+MUST be the very first two lines, before any other import (jax locks the
+device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import optim                         # noqa: E402
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, get_config,  # noqa: E402
+                                replace, supported_shapes)
+from repro.core import trainer                  # noqa: E402
+from repro.distributed import sharding          # noqa: E402
+from repro.distributed.ctx import use_mesh_rules  # noqa: E402
+from repro.launch import hlo_analysis           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api                    # noqa: E402
+
+MEMBERS = 2  # multi-pod: one distributed-averaging member per pod
+
+# serving shards batch over (pod,data) when possible; decode KV sequence
+# may spill onto the pod axis as well
+MULTIPOD_RULES = {
+    "batch": (("pod", "data"), "data"),
+    "kv_seq": (("pod", "model"), "model"),
+    "member": ("pod",),
+}
+
+
+def _struct_tree(f, *a):
+    return jax.eval_shape(f, *a)
+
+
+def _stack_member_dim(tree, k=MEMBERS):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((k,) + s.shape, s.dtype), tree)
+
+
+def _shardings(struct_tree, logical_tree, mesh, rules=None):
+    return jax.tree.map(
+        lambda s, log: NamedSharding(
+            mesh, sharding.resolve_spec(s.shape, log, mesh, rules)),
+        struct_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _shape_cfg(cfg, shape):
+    """Per-shape config adjustments: dense/moe/vlm archs get the
+    sliding-window attention variant at long_500k (DESIGN.md §5)."""
+    if (shape.name == "long_500k" and not cfg.sliding_window
+            and cfg.family in ("dense", "moe", "vlm")):
+        return replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def _opt_logical(name, p_logical):
+    if name == "adamw":
+        return {"mu": p_logical, "nu": p_logical}
+    if name == "momentum":
+        return p_logical
+    return ()
+
+
+_OPTS = {"adamw": optim.adamw, "sgd": optim.sgd, "momentum": optim.momentum}
+
+
+def build_lowered(cfg, shape, mesh, *, multi_pod: bool,
+                  optimizer_name: str = "adamw", rules_override=None):
+    """Lower the appropriate step for (cfg, shape) against ``mesh``.
+
+    ``rules_override`` remaps logical axes -> mesh axes for this lowering
+    only (the §Perf hillclimb lever: e.g. {"ff": ("data",)} turns on FSDP
+    for expert weights, {"heads": ()} disables tensor parallelism)."""
+    rules = dict(MULTIPOD_RULES) if multi_pod else {}
+    if rules_override:
+        rules.update(rules_override)
+    rules = rules or None
+    optimizer = _OPTS[optimizer_name]()
+
+    # inside the vmapped member step (multi-pod train), activation
+    # constraints must NOT mention 'pod' — vmap(spmd_axis_name='pod') owns
+    # that axis and prepends it itself; the outer in_shardings still use
+    # MULTIPOD_RULES
+    ctx_rules = None if (multi_pod and shape.kind == "train") else rules
+
+    with use_mesh_rules(mesh, ctx_rules):
+        if shape.kind == "train":
+            batch_specs, batch_logical = api.input_specs(cfg, shape)
+            params = _struct_tree(
+                lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+            opt_state = _struct_tree(optimizer.init, params)
+            step = jax.ShapeDtypeStruct((), jnp.int32)
+            p_logical = api.logical_axes(cfg)
+            o_logical = _opt_logical(optimizer_name, p_logical)
+            if multi_pod:
+                params = _stack_member_dim(params)
+                opt_state = _stack_member_dim(opt_state)
+                step = jax.ShapeDtypeStruct((MEMBERS,), jnp.int32)
+                batch_specs = _stack_member_dim(batch_specs)
+                p_logical = sharding.with_member_dim(p_logical)
+                o_logical = sharding.with_member_dim(o_logical)
+                batch_logical = sharding.with_member_dim(batch_logical)
+                step_sh = NamedSharding(mesh, P("pod"))
+                fn = trainer.make_member_train_step(
+                    cfg, optimizer, optim.constant(1e-3),
+                    spmd_axis_name="pod")
+            else:
+                step_sh = NamedSharding(mesh, P())
+                fn = trainer.make_train_step(
+                    cfg, optimizer, optim.constant(1e-3))
+            in_sh = (_shardings(params, p_logical, mesh, rules),
+                     _shardings(opt_state, o_logical, mesh, rules),
+                     step_sh,
+                     _shardings(batch_specs, batch_logical, mesh, rules))
+            jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1, 2))
+            return jfn.lower(params, opt_state, step, batch_specs)
+
+        if shape.kind == "prefill":
+            batch_specs, batch_logical = api.input_specs(cfg, shape)
+            params = _struct_tree(
+                lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+            p_logical = api.logical_axes(cfg)
+            fn = trainer.make_prefill_step(cfg)
+            in_sh = (_shardings(params, p_logical, mesh, rules),
+                     _shardings(batch_specs, batch_logical, mesh, rules))
+            jfn = jax.jit(fn, in_shardings=in_sh)
+            return jfn.lower(params, batch_specs)
+
+        # decode
+        params = _struct_tree(
+            lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+        p_logical = api.logical_axes(cfg)
+        cache, c_logical = api.cache_specs(cfg, shape)
+        io_specs, io_logical = api.input_specs(cfg, shape)
+        fn = trainer.make_serve_step(cfg)
+        cache_sh = _shardings(cache, c_logical, mesh, rules)
+        in_sh = (_shardings(params, p_logical, mesh, rules),
+                 cache_sh,
+                 NamedSharding(mesh, sharding.resolve_spec(
+                     io_specs["token"].shape, io_logical["token"], mesh, rules)),
+                 NamedSharding(mesh, P()))
+        jfn = jax.jit(fn, in_shardings=in_sh,
+                      out_shardings=(NamedSharding(mesh, P()), cache_sh),
+                      donate_argnums=(1,))
+        return jfn.lower(params, cache, io_specs["token"], io_specs["pos"])
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    return {"flops_pd": float(cost.get("flops", 0.0)),
+            "bytes_pd": float(cost.get("bytes accessed", 0.0)),
+            "coll_per_chip": coll.per_chip_bytes,
+            "coll_detail": coll.as_dict()}
+
+
+def probe_costs(cfg, shape, mesh, optimizer_name: str):
+    """Per-layer cost extrapolation from unrolled tiny-L probes."""
+    L = cfg.num_layers
+
+    def measure(probe_cfg):
+        lowered = build_lowered(probe_cfg, shape, mesh, multi_pod=False,
+                                optimizer_name=optimizer_name)
+        return _cost_of(lowered.compile())
+
+    def extrapolate(m1, m2, n_body, m3=None, n_extra=0):
+        out = {}
+        for k in ("flops_pd", "bytes_pd", "coll_per_chip"):
+            body = m2[k] - m1[k]
+            total = m1[k] + (n_body - 1) * body
+            if m3 is not None:
+                extra = m3[k] - m2[k]
+                total += n_extra * extra
+            out[k] = max(total, 0.0)
+        return out
+
+    if cfg.family == "hybrid_zamba2":
+        # m1: 1 mamba layer, no shared attn; m2: 2 mamba layers, none;
+        # m3: 2 mamba layers + 1 shared-attn invocation
+        from repro.models.zamba2 import num_attn_invocations
+        m1 = measure(replace(cfg, num_layers=1, unroll_layers=True,
+                             shared_attn_every=6))
+        m2 = measure(replace(cfg, num_layers=2, unroll_layers=True,
+                             shared_attn_every=6))
+        m3 = measure(replace(cfg, num_layers=2, unroll_layers=True,
+                             shared_attn_every=2))
+        inv = num_attn_invocations(cfg)
+        return extrapolate(m1, m2, L, m3=m3, n_extra=inv), 3
+    m1 = measure(replace(cfg, num_layers=1, unroll_layers=True))
+    m2 = measure(replace(cfg, num_layers=2, unroll_layers=True))
+    return extrapolate(m1, m2, L), 2
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                optimizer_name: str = "adamw", with_probes: bool = True):
+    """Returns (compiled, report_dict)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = _shape_cfg(get_config(arch), shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for s in mesh.shape.values():
+        chips *= s
+
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape, mesh, multi_pod=multi_pod,
+                            optimizer_name=optimizer_name)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    scan_cost = _cost_of(compiled)
+
+    # the paper's Reduce: lower + compile the cross-pod weight average too
+    average_report = None
+    if multi_pod and shape.kind == "train":
+        params = _struct_tree(
+            lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+        params = _stack_member_dim(params)
+        p_logical = sharding.with_member_dim(api.logical_axes(cfg))
+        p_sh = _shardings(params, p_logical, mesh, MULTIPOD_RULES)
+        avg_fn = trainer.make_average_step()
+        avg_compiled = jax.jit(avg_fn, in_shardings=(p_sh,),
+                               out_shardings=p_sh,
+                               donate_argnums=(0,)).lower(params).compile()
+        avg_cost = _cost_of(avg_compiled)
+        average_report = {
+            "collective_per_chip_bytes": avg_cost["coll_per_chip"],
+            "collectives": avg_cost["coll_detail"],
+            "t_collective_s": avg_cost["coll_per_chip"] / hlo_analysis.LINK_BW,
+            "note": "one cross-pod all-reduce mean per averaging event — "
+                    "the paper's entire communication cost",
+        }
+
+    corrected, n_probes = (None, 0)
+    if with_probes and not multi_pod:
+        t0 = time.time()
+        corrected, n_probes = probe_costs(cfg, shape, mesh, optimizer_name)
+        t_probe = time.time() - t0
+    else:
+        t_probe = 0.0
+
+    cost = corrected or scan_cost
+    terms = hlo_analysis.roofline_terms(
+        cost["flops_pd"] * chips, cost["bytes_pd"] * chips,
+        cost["coll_per_chip"], chips)
+
+    if shape.kind in ("train", "prefill"):
+        n_tokens = shape.global_batch * shape.seq_len
+    else:
+        n_tokens = shape.global_batch  # decode: one new token per sequence
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * n_tokens
+    if multi_pod and shape.kind == "train":
+        model_flops *= MEMBERS  # each member trains on its own batch
+
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "probe_s": round(t_probe, 2), "n_probes": n_probes,
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+            "alias_bytes_per_device": getattr(mem, "alias_size_in_bytes", 0),
+            "temp_bytes_upper_bound": getattr(mem, "temp_size_in_bytes", 0),
+            "note": "CPU buffer assignment lacks the TPU memory-minimizing "
+                    "scheduler; temp is an upper bound, argument/output are "
+                    "exact per-device footprints",
+        },
+        "cost": {
+            "hlo_flops_per_device": cost["flops_pd"],
+            "hlo_bytes_per_device": cost["bytes_pd"],
+            "hlo_flops_global": cost["flops_pd"] * chips,
+            "hlo_bytes_global": cost["bytes_pd"] * chips,
+            "scan_compile_flops_pd_uncorrected": scan_cost["flops_pd"],
+            "accounting": "unrolled L=1/2 probe extrapolation"
+            if corrected else "scan compile (bodies counted once)",
+        },
+        "collectives": scan_cost["coll_detail"],
+        "collective_per_chip_bytes_corrected": cost["coll_per_chip"],
+        "roofline": terms,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / (cost["flops_pd"] * chips))
+        if cost["flops_pd"] else None,
+        "params": cfg.param_count(),
+        "active_params": n_active,
+    }
+    if average_report is not None:
+        report["average_step"] = average_report
+    return compiled, report
+
+
+def combos():
+    for arch in ARCH_IDS:
+        if arch.startswith("cnn_elm"):
+            continue  # the paper's CNN-ELM is benchmarked natively, not dry-run
+        cfg = get_config(arch)
+        ok = supported_shapes(cfg)
+        for shape_name in INPUT_SHAPES:
+            yield arch, shape_name, ok[shape_name]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape_name, supported in combos():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape_name != args.shape:
+            continue
+        for multi_pod in meshes:
+            tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip-cached] {tag}", flush=True)
+                n_ok += 1
+                continue
+            if not supported:
+                json.dump({"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "skipped": True,
+                           "reason": "encoder-only: no decode step"},
+                          open(path, "w"), indent=1)
+                print(f"[skip] {tag} (encoder-only, documented)", flush=True)
+                n_skip += 1
+                continue
+            try:
+                _, report = lower_combo(arch, shape_name, multi_pod,
+                                        args.optimizer,
+                                        with_probes=not args.no_probes)
+                json.dump(report, open(path, "w"), indent=1)
+                gb = report["memory"]["argument_bytes_per_device"] / 2**30
+                print(f"[ok] {tag} compile={report['compile_s']}s "
+                      f"probes={report['probe_s']}s args/dev={gb:.2f}GiB "
+                      f"dominant={report['roofline']['dominant']}", flush=True)
+                n_ok += 1
+            except Exception as e:
+                n_fail += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

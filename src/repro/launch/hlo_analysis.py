@@ -1,0 +1,99 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective
+traffic, so we parse the compiled module text and sum the (per-device)
+operand/result sizes of every collective op, weighted by the standard
+ring-algorithm traffic multipliers:
+
+    all-reduce          2x   (reduce-scatter + all-gather phases)
+    all-gather          1x   (result size; each chip forwards ~full result)
+    reduce-scatter      1x   (input size)
+    all-to-all          1x
+    collective-permute  1x
+
+The reported collective term is  Σ mult·bytes_per_chip / link_bw  — the
+serialized per-chip link time (subgroup collectives run in parallel across
+groups, so per-chip traffic is the right unit; this matches the brief's
+collective_bytes/(chips·link_bw) with collective_bytes = per-chip·chips).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast|ragged-all-to-all)(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    per_chip_bytes: float = 0.0            # multiplier-weighted
+    raw_bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    def as_dict(self):
+        return {"per_chip_bytes": self.per_chip_bytes,
+                "raw_bytes_by_kind": self.raw_bytes_by_kind,
+                "count_by_kind": self.count_by_kind}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        st.per_chip_bytes += _MULT[kind] * b
+        st.raw_bytes_by_kind[kind] = st.raw_bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+# TPU v5e-class hardware constants (from the brief)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, per_chip_coll_bytes: float,
+                   chips: int) -> dict:
+    """The three roofline times in seconds (per the brief's formulas;
+    flops/bytes are whole-program, collective bytes are per-chip)."""
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = hbm_bytes / (chips * HBM_BW)
+    t_coll = per_chip_coll_bytes / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,147 @@
+"""Attention: GQA with RoPE, optional qk-norm, full / sliding-window masks,
+and single-token decode against a (full or ring-buffer) KV cache.
+
+Parameter layout per layer (optionally with a leading stacked-layer dim):
+  wq: (d_model, n_heads*head_dim)    wk/wv: (d_model, n_kv*head_dim)
+  wo: (n_heads*head_dim, d_model)    q_norm/k_norm: (head_dim,) if qk_norm
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import maybe_constrain
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key, dtype=jnp.bfloat16, num_layers: int | None = None):
+    lead = () if num_layers is None else (num_layers,)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = lambda *sh: lead + sh
+    scale = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, s(d, qd), jnp.float32) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, s(d, kvd), jnp.float32) * scale).astype(dtype),
+        "wv": (jax.random.normal(kv, s(d, kvd), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, s(qd, d), jnp.float32) * (qd ** -0.5)).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(s(cfg.head_dim), dtype)
+        p["k_norm"] = jnp.ones(s(cfg.head_dim), dtype)
+    return p
+
+
+def attention_logical(cfg, stacked: bool = False):
+    lead = ("layers",) if stacked else ()
+    p = {
+        "wq": lead + ("embed", "heads"),
+        "wk": lead + ("embed", "kv_heads"),
+        "wv": lead + ("embed", "kv_heads"),
+        "wo": lead + ("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = lead + ("head_dim",)
+        p["k_norm"] = lead + ("head_dim",)
+    return p
+
+
+def _project_qkv(cfg, p, x, positions):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """q: (B,S,H,hd)  k,v: (B,T,KV,hd)  mask: (S,T) or (B,S,T) bool."""
+    groups = cfg.num_heads // cfg.num_kv_heads
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qg = q.reshape(B, S, cfg.num_kv_heads, groups, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attn_forward(cfg, p, x, positions, window: int = 0):
+    """Full-sequence (train/prefill) attention. Returns (y, (k, v)) so
+    prefill can build the KV cache."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    q = maybe_constrain(q, ("batch", None, "heads", None))
+    k = maybe_constrain(k, ("batch", None, "kv_heads", None))
+    v = maybe_constrain(v, ("batch", None, "kv_heads", None))
+    S = x.shape[1]
+    i = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = j <= i
+    if window:
+        mask &= (i - j) < window
+    y = _sdpa(cfg, q, k, v, mask)
+    y = y.reshape(*x.shape[:2], cfg.q_dim) @ p["wo"]
+    return maybe_constrain(y, ("batch", None, None)), (k, v)
+
+
+def attn_forward_bidirectional(cfg, p, x, positions):
+    """Encoder-only (HuBERT) attention: no causal mask."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    S = x.shape[1]
+    mask = jnp.ones((S, S), bool)
+    y = _sdpa(cfg, q, k, v, mask)
+    y = y.reshape(*x.shape[:2], cfg.q_dim) @ p["wo"]
+    return maybe_constrain(y, ("batch", None, None)), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode paths
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, seq_len: int, num_layers: int,
+                  dtype=jnp.bfloat16):
+    """Cache shape (L, B, T, KV, hd); T = window size for sliding-window."""
+    T = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (num_layers, batch, T, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_logical(cfg):
+    # prefer sharding kv heads over 'model'; resolve_spec falls back to
+    # replication (and we additionally offer kv_seq) on divisibility failure
+    spec = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": spec, "v": spec}
+
+
+def attn_decode(cfg, p, x, layer_cache, pos):
+    """One-token decode. x: (B, 1, d). pos: scalar int32 (tokens generated so
+    far). Returns (y, new_layer_cache)."""
+    ck, cv = layer_cache
+    T = ck.shape[1]  # (B, T, KV, hd)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    slot = (pos % T) if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+    s_idx = jnp.arange(T)
+    if cfg.sliding_window:
+        # ring buffer: slot s holds absolute position pos - ((pos - s) mod T)
+        held = pos - ((pos - s_idx) % T)
+        mask = held >= 0
+    else:
+        mask = s_idx <= pos
+    y = _sdpa(cfg, q, ck, cv, mask[None, None, :])
+    y = y.reshape(x.shape[0], 1, cfg.q_dim) @ p["wo"]
+    return y, (ck, cv)

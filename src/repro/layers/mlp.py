@@ -1,0 +1,137 @@
+"""Feed-forward layers: SwiGLU (dense archs) and top-k routed MoE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import maybe_constrain
+
+
+def init_swiglu(d_model: int, d_ff: int, key, dtype=jnp.bfloat16,
+                num_layers: int | None = None):
+    lead = () if num_layers is None else (num_layers,)
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(kg, lead + (d_model, d_ff), jnp.float32)
+                   * d_model ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ku, lead + (d_model, d_ff), jnp.float32)
+                 * d_model ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(kd, lead + (d_ff, d_model), jnp.float32)
+                   * d_ff ** -0.5).astype(dtype),
+    }
+
+
+def swiglu_logical(stacked: bool = False):
+    lead = ("layers",) if stacked else ()
+    return {"w_gate": lead + ("embed", "ff"),
+            "w_up": lead + ("embed", "ff"),
+            "w_down": lead + ("ff", "embed")}
+
+
+def swiglu(p, x):
+    h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
+    h = h * (x @ p["w_up"]).astype(jnp.float32)
+    h = maybe_constrain(h.astype(x.dtype), ("batch", None, "ff"))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k router, dense-einsum dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(d_model: int, d_ff: int, num_experts: int, key,
+             dtype=jnp.bfloat16, num_layers: int | None = None):
+    lead = () if num_layers is None else (num_layers,)
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E = num_experts
+    return {
+        "router": (jax.random.normal(kr, lead + (d_model, E), jnp.float32)
+                   * d_model ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, lead + (E, d_model, d_ff), jnp.float32)
+                   * d_model ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ku, lead + (E, d_model, d_ff), jnp.float32)
+                 * d_model ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(kd, lead + (E, d_ff, d_model), jnp.float32)
+                   * d_ff ** -0.5).astype(dtype),
+    }
+
+
+def moe_logical(stacked: bool = False):
+    lead = ("layers",) if stacked else ()
+    return {"router": lead + ("embed", "expert"),
+            "w_gate": lead + ("expert", "embed", "ff"),
+            "w_up": lead + ("expert", "embed", "ff"),
+            "w_down": lead + ("expert", "ff", "embed")}
+
+
+def moe_apply(p, x, experts_per_token: int, capacity_factor: float = 1.25,
+              combine_sharding: str = "expert"):
+    """Token-choice top-k MoE with PER-ROW sort-based capacity dispatch.
+
+    Dispatch/combine are vmapped over the batch dim so the sorts, scatters
+    and gathers are per-row: GSPMD keeps the 'data' sharding of the batch
+    dim intact (a global sort would mix shards and force replication — the
+    456 GiB/device failure mode we hit with the first implementation).
+    The expert matmuls stay global (B,E,C,·) einsums so the expert dim
+    shards over 'model' (expert parallelism). Capacity per row
+    C = ceil(S*K/E · capacity_factor); overflow drops (GShard semantics),
+    so compiled FLOPs track the ACTIVE parameter count.
+
+    Returns (y, aux) where aux is the Switch-style load-balance loss.
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    K = experts_per_token
+    C = max(1, min(int(S * K / E * capacity_factor), S * K))
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
+    top_w, top_i = jax.lax.top_k(probs, K)                       # (B, S, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    def dispatch_row(xr, top_i_r):
+        """xr: (S, D); top_i_r: (S, K) -> buf (E, C, D) + routing meta."""
+        flat_e = top_i_r.reshape(-1)                             # (S*K,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.zeros(E, jnp.int32).at[sorted_e].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos_in_e = jnp.arange(S * K, dtype=jnp.int32) - starts[sorted_e]
+        keep = pos_in_e < C
+        pos_in_e = jnp.where(keep, pos_in_e, 0)
+        token_idx = order // K
+        vals = xr[token_idx] * keep[:, None].astype(xr.dtype)
+        buf = jnp.zeros((E, C, D), xr.dtype).at[sorted_e, pos_in_e].set(
+            vals, mode="drop")
+        return buf, (order, sorted_e, pos_in_e, keep, token_idx, counts)
+
+    buf, meta = jax.vmap(dispatch_row)(x, top_i)                 # (B, E, C, D)
+    buf = maybe_constrain(buf, ("batch", "expert", None, None))
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"]).astype(x.dtype)
+    h = maybe_constrain(h, ("batch", "expert", None, "ff"))
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])           # (B, E, C, D)
+    if combine_sharding == "expert":
+        out = maybe_constrain(out, ("batch", "expert", None, None))
+    elif combine_sharding == "batch":
+        out = maybe_constrain(out, ("batch", None, None, None))
+    # "none": leave the layout choice to SPMD propagation
+
+    def combine_row(out_r, top_w_r, meta_r):
+        order, sorted_e, pos_in_e, keep, token_idx, _ = meta_r
+        gathered = out_r[sorted_e, pos_in_e]                     # (S*K, D)
+        w = (top_w_r.reshape(-1)[order] * keep)[:, None]
+        contrib = gathered.astype(jnp.float32) * w
+        return jnp.zeros((S, D), jnp.float32).at[token_idx].add(contrib)
+
+    y = jax.vmap(combine_row)(out, top_w, meta)                  # (B, S, D)
+    y = maybe_constrain(y, ("batch", None, None))
+
+    # router aux loss (Switch-style load balance)
+    counts = meta[5]                                             # (B, E)
+    frac = jnp.mean(counts.astype(jnp.float32), axis=0) / (S * K)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob)
+    return y.astype(x.dtype), aux

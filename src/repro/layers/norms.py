@@ -1,0 +1,27 @@
+"""Normalisation layers (f32 math, cast back to input dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jnp.reciprocal(jnp.sqrt(var + eps)) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def optimal_tanh(h):
+    """The paper's ELM feature activation: 1.7159 * tanh(2/3 * H)
+    (LeCun, 'Efficient BackProp')."""
+    hf = h.astype(jnp.float32)
+    return (1.7159 * jnp.tanh(hf * (2.0 / 3.0))).astype(h.dtype)

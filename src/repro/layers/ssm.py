@@ -1,0 +1,202 @@
+"""Mamba2 mixer (SSD — state-space duality, chunked matmul form).
+
+The chunked algorithm IS the TPU-native adaptation: instead of a pure
+recurrence (bad for the MXU), the sequence is processed in chunks of Q
+steps; intra-chunk work becomes (Q x Q) masked matmuls and inter-chunk work
+is a short ``lax.scan`` over chunk states — exactly the memory-hierarchy
+rethink DESIGN.md §2 calls for.
+
+Shapes: batch B, seq S, heads H, head_dim P, state N. d_inner = H*P.
+Single B/C group (G=1). Decays are scalar-per-head (mamba2), always
+negative in log space, so every exponential here is <= 1 (stable by
+construction — no log-space gymnastics needed, unlike RWKV6).
+
+Simplification vs the reference CUDA mamba2: the short depthwise causal
+conv on the (x,B,C) branch is width-4 and applied to the x branch only
+(decode carries a 3-step conv state). Recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import maybe_constrain
+from repro.layers.norms import rms_norm
+
+CONV_W = 4
+
+
+def d_inner_of(cfg):
+    return cfg.ssm_heads * cfg.ssm_head_dim
+
+
+def init_mamba2(cfg, key, dtype=jnp.bfloat16, num_layers: int | None = None):
+    lead = () if num_layers is None else (num_layers,)
+    D, H, P, N = cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = H * P
+    k1, k2, k3 = jax.random.split(key, 3)
+    in_dim = 2 * din + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(k1, lead + (D, in_dim), jnp.float32)
+                    * D ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(k2, lead + (CONV_W, din), jnp.float32)
+                   * 0.5).astype(dtype),
+        "A_log": jnp.zeros(lead + (H,), jnp.float32),
+        "dt_bias": jnp.zeros(lead + (H,), jnp.float32),
+        "D_skip": jnp.ones(lead + (H,), jnp.float32),
+        "gate_norm": jnp.ones(lead + (din,), jnp.float32),
+        "out_proj": (jax.random.normal(k3, lead + (din, D), jnp.float32)
+                     * din ** -0.5).astype(dtype),
+    }
+
+
+def mamba2_logical(stacked: bool = False):
+    lead = ("layers",) if stacked else ()
+    return {
+        "in_proj": lead + ("embed", "ssm_heads"),
+        "conv_w": lead + (None, "ssm_heads"),
+        "A_log": lead + ("ssm_heads",),
+        "dt_bias": lead + ("ssm_heads",),
+        "D_skip": lead + ("ssm_heads",),
+        "gate_norm": lead + ("ssm_heads",),
+        "out_proj": lead + ("ssm_heads", "embed"),
+    }
+
+
+def _split_proj(cfg, proj):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = H * P
+    z, xs, Bm, Cm, dt = jnp.split(proj, [din, 2 * din, 2 * din + N,
+                                         2 * din + 2 * N], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(xs, conv_w, conv_state=None):
+    """Depthwise causal conv, width CONV_W. xs: (B,S,din)."""
+    if conv_state is None:
+        pad = jnp.zeros((xs.shape[0], CONV_W - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = conv_state  # (B, CONV_W-1, din)
+    xp = jnp.concatenate([pad, xs], axis=1)
+    out = sum(xp[:, i:i + xs.shape[1]] * conv_w[i] for i in range(CONV_W))
+    new_state = xp[:, -(CONV_W - 1):]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xs.dtype), new_state
+
+
+def mamba2_forward(cfg, p, x, h0=None):
+    """Full-sequence chunked SSD. x: (B,S,D). Returns
+    (y, {"h": h_final, "conv": conv_state}) — the state dict seeds decoding.
+    S must be a multiple of cfg.ssm_chunk."""
+    B_, S, D = x.shape
+    H, P, N, Q = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    S_orig = S
+    if S % Q:
+        # pad to a chunk multiple; padded steps get dt=0 below (decay=1,
+        # zero state contribution), so the final state is exact
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    M = S // Q
+
+    proj = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    xs, conv_state = _causal_conv(xs, p["conv_w"])
+    xs = maybe_constrain(xs, ("batch", None, "ssm_heads"))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    if S != S_orig:
+        valid = (jnp.arange(S) < S_orig)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    a = -jnp.exp(p["A_log"])                                          # (H,)
+    g = dt * a                                                        # (B,S,H) < 0
+
+    xh = xs.reshape(B_, M, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B_, M, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, M, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B_, M, Q, H)
+    gc = g.reshape(B_, M, Q, H)
+    cum = jnp.cumsum(gc, axis=2)                                      # (B,M,Q,H)
+
+    # intra-chunk: scores[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, j<=i
+    L = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])        # (B,M,Q,Q,H)
+    iidx = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jidx = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where((jidx <= iidx)[None, None, :, :, None], L, 0.0)
+    CB = jnp.einsum("bmin,bmjn->bmij", Cc, Bc)                        # (B,M,Q,Q)
+    scores = CB[..., None] * L * dtc[:, :, None, :, :]                # (B,M,Q,Q,H)
+    y_intra = jnp.einsum("bmijh,bmjhp->bmihp", scores, xh)
+
+    # chunk states: h_chunk = sum_j exp(cum_Q - cum_j) dt_j x_j (x) B_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,M,Q,H)
+    w = decay_to_end * dtc                                            # (B,M,Q,H)
+    h_chunk = jnp.einsum("bmqh,bmqhp,bmqn->bmhpn", w, xh, Bc)         # (B,M,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # (B,M,H)
+
+    # inter-chunk scan over M chunks
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def chunk_scan(h, inp):
+        hc, cd = inp                     # (B,H,P,N), (B,H)
+        h_out = h                        # state BEFORE this chunk
+        h = cd[:, :, None, None] * h + hc
+        return h, h_out
+
+    hs_in = (jnp.moveaxis(h_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_prevs = jax.lax.scan(chunk_scan, h0, hs_in)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                             # (B,M,H,P,N)
+
+    # inter-chunk contribution: y_inter[i] = exp(cum_i) * C_i . h_prev
+    y_inter = jnp.einsum("bmqh,bmqn,bmhpn->bmqhp",
+                         jnp.exp(cum), Cc, h_prevs)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    y = y + p["D_skip"][:, None] * xh.reshape(B_, S, H, P)
+    y = y.reshape(B_, S, H * P)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    if S != S_orig:
+        y = y[:, :S_orig]
+        # conv state must hold the last real (pre-conv) inputs, not padding
+        raw = _split_proj(cfg, (x[:, :S_orig] @ p["in_proj"]))[1]
+        lead = jnp.zeros((B_, max(CONV_W - 1 - S_orig, 0), raw.shape[-1]),
+                         raw.dtype)
+        conv_state = jnp.concatenate([lead, raw], axis=1)[:, -(CONV_W - 1):]
+    return y @ p["out_proj"], {"h": h_final, "conv": conv_state}
+
+
+def mamba2_init_state(cfg, batch: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = H * P
+    return {"h": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_W - 1, din), jnp.bfloat16)}
+
+
+def mamba2_state_logical():
+    return {"h": ("batch", "ssm_heads", None, None),
+            "conv": ("batch", None, "ssm_heads")}
+
+
+def mamba2_decode(cfg, p, x, state):
+    """Single-token step. x: (B,1,D). Returns (y, new_state)."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], state["conv"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,1,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)[:, 0]                                     # (B,H)
+
+    xh = xs.reshape(-1, H, P).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                                 # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    dx = dt[:, 0, :, None] * xh                                       # (B,H,P)
+    h = decay[:, :, None, None] * state["h"] + jnp.einsum(
+        "bhp,bn->bhpn", dx, Bv)
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h)
+    y = y + p["D_skip"][:, None] * xh
+    y = y.reshape(x.shape[0], 1, H * P)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}

@@ -1,0 +1,107 @@
+"""Family dispatch + input specs.
+
+Every model family exposes: init_params, logical_axes, loss_fn,
+hidden_states (ELM H), and the serving trio init_cache/prefill/decode_step.
+``input_specs`` builds ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) + matching logical shardings for each assigned input shape —
+the dry-run contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import rwkv6, transformer, zamba2
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "encoder", "vlm")
+
+
+def module_of(cfg: ArchConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "ssm_rwkv6":
+        return rwkv6
+    if cfg.family == "hybrid_zamba2":
+        return zamba2
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    return module_of(cfg).init_params(cfg, key, dtype)
+
+
+def logical_axes(cfg):
+    return module_of(cfg).logical_axes(cfg)
+
+
+def loss_fn(cfg, params, batch):
+    return module_of(cfg).loss_fn(cfg, params, batch)
+
+
+def hidden_states(cfg, params, batch):
+    return module_of(cfg).hidden_states(cfg, params, batch)
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    return module_of(cfg).init_cache(cfg, batch, seq_len, dtype)
+
+
+def cache_logical(cfg):
+    return module_of(cfg).cache_logical(cfg)
+
+
+def prefill(cfg, params, batch, max_len: int | None = None):
+    mod = module_of(cfg)
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return mod.prefill(cfg, params, batch, max_len=max_len)
+    return mod.prefill(cfg, params, batch)  # SSM/hybrid state is seq-free
+
+
+def decode_step(cfg, params, cache, token, pos):
+    return module_of(cfg).decode_step(cfg, params, cache, token, pos)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape):
+    """Returns (batch_specs, batch_logical) for train/prefill kinds, and
+    (token/pos specs, logical) for decode kinds (cache comes from
+    ``jax.eval_shape(init_cache, ...)`` in the launcher)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            specs = {"frames": sds((B, S, transformer.AUDIO_FRONTEND_DIM), bf16)}
+            logical = {"frames": ("batch", "seq", "feature")}
+        elif cfg.frontend == "vision":
+            P = cfg.num_prefix_tokens
+            St = S - P
+            specs = {"tokens": sds((B, St), i32),
+                     "patches": sds((B, P, transformer.VISION_FRONTEND_DIM), bf16)}
+            logical = {"tokens": ("batch", "seq"),
+                       "patches": ("batch", "seq", "feature")}
+        else:
+            specs = {"tokens": sds((B, S), i32)}
+            logical = {"tokens": ("batch", "seq")}
+        if shape.kind == "train":
+            tshape = specs.get("tokens", specs.get("frames")).shape[:2]
+            specs["targets"] = sds(tshape, i32)
+            logical["targets"] = ("batch", "seq")
+        return specs, logical
+
+    # decode: one new token against a seq_len-sized cache/state
+    specs = {"token": sds((B, 1), i32), "pos": sds((), i32)}
+    logical = {"token": ("batch", None), "pos": ()}
+    return specs, logical
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """Abstract cache/state pytree + logical shardings for decode shapes."""
+    structs = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+    return structs, cache_logical(cfg)

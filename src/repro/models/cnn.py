@@ -1,0 +1,63 @@
+"""The paper's CNN feature learner (LeNet family, Fig. 1/3).
+
+Architecture string such as 6c-2s-12c-2s (Table 4/5) or 3c-2s-9c-2s
+(Table 2/3): conv (valid, k=5) -> ReLU -> mean-pool (down-sampling, scale 2)
+per stage. The flattened last pooled map is the ELM hidden matrix H
+(Fig. 2) after the paper's optimal-tanh activation — applied in
+``repro.core.elm``, not here.
+
+Convolution runs through ``repro.kernels.conv2d.ops`` which dispatches to
+the Pallas TPU kernel on TPU and to ``jax.lax.conv`` on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import ops as conv_ops
+
+
+def feature_dim(cfg) -> int:
+    n, ch = cfg.image_size, cfg.image_channels
+    for c in cfg.cnn_channels:
+        n = (n - cfg.cnn_kernel + 1) // cfg.cnn_pool
+        ch = c
+    return n * n * ch
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    """Kernels W: (k, k, c_in, c_out) + bias per stage. The paper
+    initialises all k machines with the SAME weights (Alg. 2 line 3) —
+    callers reuse one init across members."""
+    params = []
+    ch_in = cfg.image_channels
+    for i, ch_out in enumerate(cfg.cnn_channels):
+        key, sub = jax.random.split(key)
+        fan_in = cfg.cnn_kernel * cfg.cnn_kernel * ch_in
+        w = jax.random.normal(sub, (cfg.cnn_kernel, cfg.cnn_kernel, ch_in, ch_out),
+                              jnp.float32) * (2.0 / fan_in) ** 0.5
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((ch_out,), dtype)})
+        ch_in = ch_out
+    return {"stages": tuple(params)}
+
+
+def logical_axes(cfg):
+    return {"stages": tuple({"w": (None, None, None, "heads"), "b": ("heads",)}
+                            for _ in cfg.cnn_channels)}
+
+
+def _mean_pool(x, s):
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // s, s, W // s, s, C)
+    return jnp.mean(x, axis=(2, 4))
+
+
+def features(cfg, params, images, *, use_pallas: bool = False):
+    """images: (B, H, W) or (B, H, W, C) in [0,1]. Returns flat H (B, F)."""
+    x = images if images.ndim == 4 else images[..., None]
+    x = x.astype(jnp.float32)
+    for st in params["stages"]:
+        x = conv_ops.conv2d_valid(x, st["w"], use_pallas=use_pallas) + st["b"]
+        x = jax.nn.relu(x)
+        x = _mean_pool(x, cfg.cnn_pool)
+    return x.reshape(x.shape[0], -1)

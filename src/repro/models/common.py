@@ -1,0 +1,31 @@
+"""Shared model helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def layer_scan(body, carry, stacked, unroll: bool, collect_ys: bool = False):
+    """``lax.scan`` over stacked layer params, or an unrolled Python loop.
+
+    The unrolled form exists for the dry-run's cost accounting: XLA's
+    cost_analysis counts while-loop bodies once, so scanned layers would
+    under-report FLOPs/bytes/collectives by ~L x. Runtime keeps scan (small
+    HLO, fast compiles).
+
+    body: (carry, layer_params) -> (carry, y)
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, stacked)
+    num = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(num):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        carry, y = body(carry, lp)
+        if collect_ys or y is not None:
+            ys.append(y)
+    if ys and ys[0] is not None:
+        import jax.numpy as jnp
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,393 @@
+"""RWKV6 "Finch" — attention-free linear-attention LM with data-dependent
+per-channel decay [arXiv:2404.05892].
+
+Two execution modes for the WKV recurrence:
+  mode="scan"    — exact per-step ``lax.scan`` recurrence (the paper-faithful
+                   reference; numerically exact, recurrence-bound).
+  mode="chunked" — chunk-parallel masked-matmul form (TPU/MXU-friendly;
+                   per-channel decays handled in log space with a clamped
+                   reference point; chunk size cfg.ssm_chunk). This is the
+                   beyond-paper perf variant — see EXPERIMENTS.md §Perf.
+
+State per layer: S (B, H, P, P) wkv matrix + token-shift carries.
+Head dim P = 64 (RWKV convention), H = d_model / 64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import maybe_constrain
+from repro.layers.norms import layer_norm
+from repro.models.common import layer_scan
+
+HEAD_DIM = 64
+DECAY_LORA = 64
+CLAMP = 30.0  # max |log-decay| offset inside a chunk (chunked mode)
+
+
+def _heads(cfg):
+    return cfg.d_model // HEAD_DIM
+
+
+def _heads_padded(cfg):
+    """Effective head count. cfg.rwkv_head_pad_to > 0 rounds H up to that
+    multiple (e.g. 40 -> 48 for a 16-way model axis). Padded projection
+    columns are zero-initialised and their gradients vanish identically
+    (padded-head k=v=r=g=0 ⇒ y=0 and all upstream grads 0), so the padded
+    model is EXACTLY the unpadded one — but every head reshape now divides
+    the mesh. See EXPERIMENTS.md §Perf pick B."""
+    H = _heads(cfg)
+    m = getattr(cfg, "rwkv_head_pad_to", 0)
+    if m and H % m:
+        return H + (m - H % m)
+    return H
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    L, D, F, V = cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    Hp = _heads_padded(cfg)
+    Dp = Hp * HEAD_DIM  # padded time-mix width (== D when padding is off)
+
+    def pad_cols(a):  # zero the padded output channels
+        return a if Dp == D else a.at[..., D:].set(0)
+
+    def pad_rows(a):
+        return a if Dp == D else a.at[..., D:, :].set(0)
+
+    ks = jax.random.split(key, 12)
+    nrm = lambda k, *sh: (jax.random.normal(k, (L,) + sh, jnp.float32)
+                          * sh[0] ** -0.5).astype(dtype)
+    layers = {
+        # time mixing
+        "mu": jnp.full((L, 5, D), 0.5, jnp.float32),   # lerp coeffs r,k,v,g,w
+        "w_r": pad_cols(nrm(ks[0], D, Dp)),
+        "w_k": pad_cols(nrm(ks[1], D, Dp)),
+        "w_v": pad_cols(nrm(ks[2], D, Dp)),
+        "w_g": pad_cols(nrm(ks[3], D, Dp)),
+        "w_o": pad_rows(nrm(ks[4], Dp, D)),
+        "decay_base": jnp.full((L, Dp), -1.0, jnp.float32),   # w0
+        "decay_A": nrm(ks[5], D, DECAY_LORA),
+        "decay_B": pad_cols(nrm(ks[6], DECAY_LORA, Dp)),
+        "bonus_u": jnp.zeros((L, Hp, HEAD_DIM), jnp.float32),
+        "ln_x": jnp.ones((L, Dp), jnp.float32),              # per-head groupnorm scale
+        # channel mixing
+        "mu_cm": jnp.full((L, 2, D), 0.5, jnp.float32),
+        "w_ck": nrm(ks[7], D, F),
+        "w_cv": nrm(ks[8], F, D),
+        "w_cr": nrm(ks[9], D, D),
+        # norms
+        "ln1_s": jnp.ones((L, D), jnp.float32),
+        "ln1_b": jnp.zeros((L, D), jnp.float32),
+        "ln2_s": jnp.ones((L, D), jnp.float32),
+        "ln2_b": jnp.zeros((L, D), jnp.float32),
+    }
+    return {
+        "embed": (jax.random.normal(ks[10], (V, D), jnp.float32)
+                  * D ** -0.5).astype(dtype),
+        "ln_out": jnp.ones((D,), jnp.float32),
+        "unembed": (jax.random.normal(ks[11], (D, V), jnp.float32)
+                    * D ** -0.5).astype(dtype),
+        "layers": layers,
+    }
+
+
+def logical_axes(cfg):
+    lead = ("layers",)
+    layers = {
+        "mu": lead + (None, "embed"),
+        "w_r": lead + ("embed", "heads"),
+        "w_k": lead + ("embed", "heads"),
+        "w_v": lead + ("embed", "heads"),
+        "w_g": lead + ("embed", "heads"),
+        "w_o": lead + ("heads", "embed"),
+        "decay_base": lead + ("embed",),
+        "decay_A": lead + ("embed", None),
+        "decay_B": lead + (None, "embed"),
+        "bonus_u": lead + ("heads", None),
+        "ln_x": lead + ("embed",),
+        "mu_cm": lead + (None, "embed"),
+        "w_ck": lead + ("embed", "ff"),
+        "w_cv": lead + ("ff", "embed"),
+        "w_cr": lead + ("embed", "heads"),
+        "ln1_s": lead + ("embed",),
+        "ln1_b": lead + ("embed",),
+        "ln2_s": lead + ("embed",),
+        "ln2_b": lead + ("embed",),
+    }
+    return {"embed": ("vocab", "embed"), "ln_out": ("embed",),
+            "unembed": ("embed", "vocab"), "layers": layers}
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _time_mix_projections(cfg, lp, x, x_prev):
+    """Compute r,k,v,g, per-step log-decay lw. Shapes (B,S,Hp,P)."""
+    B, S, D = x.shape
+    H = _heads_padded(cfg)
+    xs = _shift(x, x_prev)
+    mu = lp["mu"].astype(x.dtype)                        # (5,D)
+    # §Perf pick B: pin lerp outputs to batch-only sharding — without this
+    # SPMD propagation picks d_model-sharded layouts in the backward pass
+    # and re-gathers the full (B,S,D) stream ~24x per layer (HLO-verified)
+    lerp = lambda i: maybe_constrain(x + (xs - x) * mu[i],
+                                     ("batch", None, None))
+    r = maybe_constrain(lerp(0) @ lp["w_r"], ("batch", None, "heads"))
+    k = maybe_constrain(lerp(1) @ lp["w_k"], ("batch", None, "heads"))
+    v = maybe_constrain(lerp(2) @ lp["w_v"], ("batch", None, "heads"))
+    g = maybe_constrain(lerp(3) @ lp["w_g"], ("batch", None, "heads"))
+    xw = lerp(4).astype(jnp.float32)
+    dec = lp["decay_base"] + jnp.tanh(xw @ lp["decay_A"].astype(jnp.float32)) \
+        @ lp["decay_B"].astype(jnp.float32)
+    lw = -jnp.exp(dec)                                   # (B,S,D) log-decay < 0
+    shp = (B, S, H, HEAD_DIM)
+    return (r.reshape(shp).astype(jnp.float32), k.reshape(shp).astype(jnp.float32),
+            v.reshape(shp).astype(jnp.float32), g, lw.reshape(shp))
+
+
+def _wkv_scan(r, k, v, lw, u, s0):
+    """Exact recurrence. r,k,v,lw: (B,S,H,P); u: (H,P); s0: (B,H,P,P).
+    Returns (y (B,S,H,P), s_final)."""
+    w = jnp.exp(lw)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,P)
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_final
+
+
+def _wkv_chunked(r, k, v, lw, u, s0, chunk: int):
+    """Chunk-parallel WKV: intra-chunk masked matmuls + inter-chunk scan.
+    Log-space per-channel decays, clamped at CLAMP for the k/decay ratio
+    (far-past contributions below e^-30 are dropped — documented)."""
+    B, S, H, P = r.shape
+    Q = chunk
+    S_orig = S
+    if S % Q:
+        # pad to a chunk multiple: zero k/v contribute nothing to the state
+        # and zero log-decay leaves it untouched — exactly neutral
+        pad = Q - S % Q
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = zpad(r), zpad(k), zpad(v), zpad(lw)
+        S = S + pad
+    M = S // Q
+    rs = r.reshape(B, M, Q, H, P)
+    ks = k.reshape(B, M, Q, H, P)
+    vs = v.reshape(B, M, Q, H, P)
+    lws = lw.reshape(B, M, Q, H, P)
+    cum = jnp.cumsum(lws, axis=2)                          # (B,M,Q,H,P) <= 0
+    cum_prev = cum - lws                                   # sum over s<t
+
+    # intra-chunk: y_t += sum_{j<t} (r_t . exp(cum_{t-1}-cum_j) k_j) v_j
+    r_dec = rs * jnp.exp(cum_prev)                          # exp <= 1
+    k_dec = ks * jnp.exp(jnp.minimum(-cum, CLAMP))
+    att = jnp.einsum("bmihp,bmjhp->bmhij", r_dec, k_dec)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    att = jnp.where((jj < ii)[None, None, None], att, 0.0)
+    y = jnp.einsum("bmhij,bmjhp->bmihp", att, vs)
+    # bonus (diagonal) term: + (r_t . u*k_t) v_t
+    diag = jnp.einsum("bmqhp,hp,bmqhp->bmqh", rs, u, ks)
+    y = y + diag[..., None] * vs
+
+    # chunk state updates: s' = diag(exp(cum_Q)) s + sum_j diag(exp(cum_Q-cum_j)) k_j v_j^T
+    k_end = ks * jnp.exp(cum[:, :, -1:, :, :] - cum)
+    s_chunk = jnp.einsum("bmqhp,bmqhv->bmhpv", k_end, vs)
+    chunk_decay = jnp.exp(cum[:, :, -1])                    # (B,M,H,P)
+
+    def cscan(s, inp):
+        sc, cd = inp
+        s_before = s
+        s = cd[..., None] * s + sc
+        return s, s_before
+
+    s_final, s_prevs = jax.lax.scan(
+        cscan, s0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                   # (B,M,H,P,V)
+
+    y_inter = jnp.einsum("bmqhp,bmhpv->bmqhv", r_dec, s_prevs)
+    y = (y + y_inter).reshape(B, S, H, P)
+    return y[:, :S_orig], s_final
+
+
+def _group_norm_heads(y, scale, eps):
+    """Per-head RMS norm (stand-in for RWKV's GroupNorm), then flatten."""
+    B, S, H, P = y.shape
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, H * P) * scale).astype(jnp.bfloat16)
+
+
+def _channel_mix(lp, x, x_prev=None):
+    xs = _shift(x, x_prev)
+    mu = lp["mu_cm"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    kk = jnp.square(jax.nn.relu((xk @ lp["w_ck"]).astype(jnp.float32)))
+    kk = maybe_constrain(kk, ("batch", None, "ff"))
+    out = kk.astype(x.dtype) @ lp["w_cv"]
+    return jax.nn.sigmoid((xr @ lp["w_cr"]).astype(jnp.float32)).astype(x.dtype) * out
+
+
+def _layer(cfg, lp, x, mode, chunk, states=None):
+    """One RWKV6 block. states=None for training (zero init carries)."""
+    H = _heads_padded(cfg)
+    x = maybe_constrain(x, ("batch", None, None))
+    xin = layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+    r, k, v, g, lw = _time_mix_projections(
+        cfg, lp, xin, None if states is None else states["x_tm"][:, None])
+    s0 = (jnp.zeros((x.shape[0], H, HEAD_DIM, HEAD_DIM), jnp.float32)
+          if states is None else states["S"])
+    u = lp["bonus_u"]
+    if mode == "scan":
+        y, s_final = _wkv_scan(r, k, v, lw, u, s0)
+    else:
+        y, s_final = _wkv_chunked(r, k, v, lw, u, s0, chunk)
+    y = _group_norm_heads(y, lp["ln_x"], cfg.norm_eps)
+    y = maybe_constrain(y, ("batch", None, "heads"))
+    y = (y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)) @ lp["w_o"]
+    x = maybe_constrain(x + y, ("batch", None, None))
+    xin2 = layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+    cm = _channel_mix(lp, xin2,
+                      None if states is None else states["x_cm"][:, None])
+    x = x + cm
+    new_states = None
+    if states is not None:
+        new_states = {"S": s_final, "x_tm": xin[:, -1], "x_cm": xin2[:, -1]}
+    return x, new_states
+
+
+def forward(cfg, p, batch, *, mode: str | None = None, remat: bool = True):
+    mode = mode or cfg.rwkv_mode
+    x = p["embed"][batch["tokens"]]
+    x = maybe_constrain(x, ("batch", None, None))
+    chunk = cfg.ssm_chunk
+
+    def body(x, lp):
+        y, _ = _layer(cfg, lp, x, mode, chunk)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = layer_scan(body, x, p["layers"], cfg.unroll_layers)
+    x = layer_norm(x, p["ln_out"], jnp.zeros_like(p["ln_out"]), cfg.norm_eps)
+    logits = (x @ p["unembed"]).astype(jnp.float32)
+    return maybe_constrain(logits, ("batch", None, "vocab")), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, p, batch, mode: str | None = None):
+    logits, _ = forward(cfg, p, batch, mode=mode)
+    tgt = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+def hidden_states(cfg, p, batch, *, mode: str | None = None, remat: bool = True):
+    mode = mode or cfg.rwkv_mode
+    x = p["embed"][batch["tokens"]]
+    chunk = cfg.ssm_chunk
+
+    def body(x, lp):
+        y, _ = _layer(cfg, lp, x, mode, chunk)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = layer_scan(body, x, p["layers"], cfg.unroll_layers)
+    return layer_norm(x, p["ln_out"], jnp.zeros_like(p["ln_out"]), cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# serving: O(1)-in-seq state (this is why rwkv6 runs long_500k natively)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    del seq_len  # constant-size state!
+    L, D, H = cfg.num_layers, cfg.d_model, _heads_padded(cfg)
+    return {"S": jnp.zeros((L, batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+            "x_tm": jnp.zeros((L, batch, D), dtype),
+            "x_cm": jnp.zeros((L, batch, D), dtype)}
+
+
+def cache_logical(cfg):
+    return {"S": ("layers", "batch", "heads", None, None),
+            "x_tm": ("layers", "batch", "embed"),
+            "x_cm": ("layers", "batch", "embed")}
+
+
+def prefill(cfg, p, batch, *, mode: str | None = None):
+    """Encode a prompt; returns (last-position logits, per-layer state)."""
+    mode = mode or cfg.rwkv_mode
+    x = p["embed"][batch["tokens"]]
+    B = x.shape[0]
+    H = _heads_padded(cfg)
+
+    def scan_fn(x, lp):
+        states0 = {"S": jnp.zeros((B, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+                   "x_tm": jnp.zeros((B, cfg.d_model), x.dtype),
+                   "x_cm": jnp.zeros((B, cfg.d_model), x.dtype)}
+        x_out, ns = _layer(cfg, lp, x, mode, cfg.ssm_chunk, states0)
+        return x_out, (ns["S"], ns["x_tm"], ns["x_cm"])
+
+    x, (S, x_tm, x_cm) = layer_scan(scan_fn, x, p["layers"], cfg.unroll_layers)
+    x = layer_norm(x[:, -1:], p["ln_out"], jnp.zeros_like(p["ln_out"]),
+                   cfg.norm_eps)
+    logits = (x @ p["unembed"]).astype(jnp.float32)
+    return logits, {"S": S, "x_tm": x_tm, "x_cm": x_cm}
+
+
+def decode_step(cfg, p, cache, token, pos):
+    del pos  # recurrent state carries position implicitly
+    x = p["embed"][token]  # (B,1,D)
+
+    def scan_fn(x, inp):
+        lp, S, x_tm, x_cm = inp
+        states = {"S": S, "x_tm": x_tm, "x_cm": x_cm}
+        x, ns = _layer(cfg, lp, x, "scan", cfg.ssm_chunk, states)
+        return x, (ns["S"], ns["x_tm"], ns["x_cm"])
+
+    x, (S, x_tm, x_cm) = layer_scan(
+        scan_fn, x, (p["layers"], cache["S"], cache["x_tm"], cache["x_cm"]),
+        cfg.unroll_layers)
+    x = layer_norm(x, p["ln_out"], jnp.zeros_like(p["ln_out"]), cfg.norm_eps)
+    logits = (x @ p["unembed"]).astype(jnp.float32)
+    return logits, {"S": S, "x_tm": x_tm, "x_cm": x_cm}
+
+
+def pad_head_params(params, cfg_from, cfg_to):
+    """Convert an unpadded checkpoint into the head-padded layout
+    (cfg_to.rwkv_head_pad_to > 0): zero columns/rows for the extra heads.
+    The padded model computes EXACTLY the same function."""
+    Hp = _heads_padded(cfg_to)
+    D = cfg_from.d_model
+    Dp = Hp * HEAD_DIM
+    if Dp == D:
+        return params
+    lay = dict(params["layers"])
+
+    def pc(a):  # pad output channels with zeros
+        return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, Dp - D)])
+
+    for k in ("w_r", "w_k", "w_v", "w_g", "decay_B"):
+        lay[k] = pc(lay[k])
+    lay["w_o"] = jnp.pad(lay["w_o"], ((0, 0), (0, Dp - D), (0, 0)))
+    lay["decay_base"] = jnp.pad(lay["decay_base"], ((0, 0), (0, Dp - D)),
+                                constant_values=-1.0)
+    lay["ln_x"] = jnp.pad(lay["ln_x"], ((0, 0), (0, Dp - D)),
+                          constant_values=1.0)
+    lay["bonus_u"] = jnp.pad(lay["bonus_u"],
+                             ((0, 0), (0, Hp - _heads(cfg_from)), (0, 0)))
+    return {**params, "layers": lay}

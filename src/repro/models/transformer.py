@@ -1,0 +1,303 @@
+"""Unified transformer backbone: dense GQA decoders (internlm2, qwen3*,
+minicpm), MoE decoders (qwen3-moe, olmoe), encoder-only (hubert), and VLM
+(internvl2 = patch-embedding prefix + decoder).
+
+Layers are STACKED (leading L dim) and applied with ``jax.lax.scan`` +
+``jax.checkpoint`` — this keeps the HLO small across the 80 dry-run compiles
+and gives the remat policy a single knob.
+
+Stub frontends (the one allowed carve-out): audio frame embeddings /
+vision patch embeddings arrive precomputed via ``input_specs``; a learned
+projection maps them into d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import maybe_constrain
+from repro.layers import attention as attn
+from repro.layers import mlp as mlp_lib
+from repro.layers.norms import rms_norm
+from repro.models.common import layer_scan
+
+AUDIO_FRONTEND_DIM = 512    # wav2vec2/HuBERT conv-extractor output dim
+VISION_FRONTEND_DIM = 1024  # InternViT patch-embedding dim (stub)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 8)
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.padded_vocab
+    layers = {
+        "attn": attn.init_attention(cfg, keys[0], dtype, num_layers=L),
+        "ln1": jnp.ones((L, D), jnp.float32),
+        "ln2": jnp.ones((L, D), jnp.float32),
+    }
+    if cfg.family == "moe":
+        layers["moe"] = mlp_lib.init_moe(D, cfg.moe_d_ff or cfg.d_ff,
+                                         cfg.num_experts, keys[1], dtype,
+                                         num_layers=L)
+    else:
+        layers["mlp"] = mlp_lib.init_swiglu(D, cfg.d_ff, keys[1], dtype,
+                                            num_layers=L)
+    embed = (jax.random.normal(keys[2], (V, D), jnp.float32)
+             * D ** -0.5).astype(dtype)
+    if V > cfg.vocab_size:  # padded rows start (and provably stay) zero
+        embed = embed.at[cfg.vocab_size:].set(0)
+    p = {
+        "embed": embed,
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(keys[3], (D, V), jnp.float32)
+                        * D ** -0.5).astype(dtype)
+    if cfg.frontend == "audio":
+        p["frontend_proj"] = (jax.random.normal(
+            keys[4], (AUDIO_FRONTEND_DIM, D), jnp.float32)
+            * AUDIO_FRONTEND_DIM ** -0.5).astype(dtype)
+    if cfg.frontend == "vision":
+        p["projector"] = {
+            "w1": (jax.random.normal(keys[5], (VISION_FRONTEND_DIM, D),
+                                     jnp.float32)
+                   * VISION_FRONTEND_DIM ** -0.5).astype(dtype),
+            "w2": (jax.random.normal(keys[6], (D, D), jnp.float32)
+                   * D ** -0.5).astype(dtype),
+        }
+    return p
+
+
+def logical_axes(cfg):
+    layers = {
+        "attn": attn.attention_logical(cfg, stacked=True),
+        "ln1": ("layers", "embed"),
+        "ln2": ("layers", "embed"),
+    }
+    if cfg.family == "moe":
+        layers["moe"] = mlp_lib.moe_logical(stacked=True)
+    else:
+        layers["mlp"] = mlp_lib.swiglu_logical(stacked=True)
+    p = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("embed", "vocab")
+    if cfg.frontend == "audio":
+        p["frontend_proj"] = ("feature", "embed")
+    if cfg.frontend == "vision":
+        p["projector"] = {"w1": ("feature", "embed"), "w2": ("embed", "embed")}
+    return p
+
+
+
+
+def _mask_padded_logits(cfg, logits):
+    """-1e30 on padded vocab slots: softmax prob is exactly 0 in f32, so
+    padded-row gradients vanish identically (semantics EXACT)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    return jnp.where(idx < cfg.vocab_size, logits, -1e30)
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block(cfg, lp, x, positions, window):
+    h, _ = attn.attn_forward(cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                             positions, window=window)
+    x = x + h
+    if cfg.family == "moe":
+        h, aux = mlp_lib.moe_apply(lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                   cfg.experts_per_token,
+                                   capacity_factor=cfg.moe_capacity_factor,
+                                   combine_sharding=cfg.moe_combine_sharding)
+    else:
+        h = mlp_lib.swiglu(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        aux = jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def _embed_inputs(cfg, p, batch):
+    """Token / frame / patch embedding (+ VLM prefix concat).
+
+    Returns (x, positions, text_offset) where text_offset is the position in
+    the sequence where loss-bearing (text) tokens start.
+    """
+    if cfg.frontend == "audio":
+        x = batch["frames"].astype(p["frontend_proj"].dtype) @ p["frontend_proj"]
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, pos, 0
+    tok = p["embed"][batch["tokens"]]
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(p["projector"]["w1"].dtype)
+        pref = jax.nn.gelu((patches @ p["projector"]["w1"]).astype(jnp.float32))
+        pref = pref.astype(tok.dtype) @ p["projector"]["w2"]
+        x = jnp.concatenate([pref, tok], axis=1)
+        offset = patches.shape[1]
+    else:
+        x, offset = tok, 0
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, pos, offset
+
+
+def forward(cfg, p, batch, *, window: int | None = None, remat: bool = True):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    window = cfg.sliding_window if window is None else window
+    x, positions, offset = _embed_inputs(cfg, p, batch)
+    x = maybe_constrain(x, ("batch", None, None))
+
+    causal_window = 0 if cfg.is_encoder_only else window
+
+    def body(x, lp):
+        return _block(cfg, lp, x, positions, causal_window)
+
+    if cfg.is_encoder_only:
+        # bidirectional: replace causal mask by full mask via window=0 and a
+        # non-causal sdpa — handled inside attn by passing bidirectional flag
+        def body(x, lp):  # noqa: F811
+            h, _ = attn.attn_forward_bidirectional(
+                cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), positions)
+            x = x + h
+            h = mlp_lib.swiglu(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + h, jnp.zeros((), jnp.float32)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, lp):
+        y, aux = body(carry, lp)
+        return y, aux
+
+    x, auxes = layer_scan(scan_fn, x, p["layers"], cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if offset:
+        x = x[:, offset:]
+    unembed = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = _mask_padded_logits(cfg, (x @ unembed).astype(jnp.float32))
+    logits = maybe_constrain(logits, ("batch", None, "vocab"))
+    return logits, jnp.mean(auxes)
+
+
+def hidden_states(cfg, p, batch, *, remat: bool = True):
+    """Final-norm hidden states (B, S, D) — the ELM head's H (DESIGN.md §3)."""
+    window = cfg.sliding_window
+    x, positions, offset = _embed_inputs(cfg, p, batch)
+    causal_window = 0 if cfg.is_encoder_only else window
+
+    def body(x, lp):
+        if cfg.is_encoder_only:
+            h, _ = attn.attn_forward_bidirectional(
+                cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), positions)
+            x = x + h
+            h = mlp_lib.swiglu(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + h, None
+        y, _ = _block(cfg, lp, x, positions, causal_window)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = layer_scan(lambda c, lp: body(c, lp), x, p["layers"],
+                      cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    return x[:, offset:] if offset else x
+
+
+def loss_fn(cfg, p, batch):
+    logits, aux = forward(cfg, p, batch)
+    tgt = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    loss = ce + cfg.router_aux_coef * aux if cfg.family == "moe" else ce
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    return attn.init_kv_cache(cfg, batch, seq_len, cfg.num_layers, dtype)
+
+
+def cache_logical(cfg):
+    return attn.kv_cache_logical(cfg)
+
+
+def prefill(cfg, p, batch, max_len: int | None = None):
+    """Encode a prompt, returning last-position logits + the KV cache.
+    ``max_len`` pads the cache so decoding can continue past the prompt."""
+    x, positions, offset = _embed_inputs(cfg, p, batch)
+    window = cfg.sliding_window
+
+    def body(x, lp):
+        h, kv = attn.attn_forward(cfg, lp["attn"],
+                                  rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                  positions, window=window)
+        x = x + h
+        if cfg.family == "moe":
+            h, _ = mlp_lib.moe_apply(lp["moe"],
+                                     rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                     cfg.experts_per_token,
+                                     capacity_factor=cfg.moe_capacity_factor,
+                                     combine_sharding=cfg.moe_combine_sharding)
+        else:
+            h = mlp_lib.swiglu(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x + h, kv
+
+    def scan_fn(carry, lp):
+        return jax.checkpoint(body)(carry, lp)
+
+    x, (ks, vs) = layer_scan(scan_fn, x, p["layers"], cfg.unroll_layers)
+    x = rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    unembed = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = _mask_padded_logits(cfg, (x @ unembed).astype(jnp.float32))
+    if cfg.sliding_window and ks.shape[2] > cfg.sliding_window:
+        ks = ks[:, :, -cfg.sliding_window:]
+        vs = vs[:, :, -cfg.sliding_window:]
+    if max_len is not None and not cfg.sliding_window:
+        pad = max_len - ks.shape[2]
+        if pad > 0:  # decode headroom beyond the prompt
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg, p, cache, token, pos):
+    """One new token against the KV cache. token: (B,1) int32; pos: scalar.
+    Returns (logits, new_cache)."""
+    x = p["embed"][token]
+
+    def scan_fn(x, inputs):
+        lp, ck, cv = inputs
+        h, (ck, cv) = attn.attn_decode(cfg, lp["attn"],
+                                       rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                       (ck, cv), pos)
+        x = x + h
+        if cfg.family == "moe":
+            h, _ = mlp_lib.moe_apply(lp["moe"],
+                                     rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                     cfg.experts_per_token,
+                                     capacity_factor=cfg.moe_capacity_factor,
+                                     combine_sharding=cfg.moe_combine_sharding)
+        else:
+            h = mlp_lib.swiglu(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x + h, (ck, cv)
+
+    x, (ks, vs) = layer_scan(
+        lambda c, inp: scan_fn(c, inp), x,
+        (p["layers"], cache["k"], cache["v"]), cfg.unroll_layers)
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    unembed = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = _mask_padded_logits(cfg, (x @ unembed).astype(jnp.float32))
+    return logits, {"k": ks, "v": vs}

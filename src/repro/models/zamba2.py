@@ -1,0 +1,258 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention+MLP
+block invoked every ``cfg.shared_attn_every`` layers [arXiv:2411.15242].
+
+The shared block's weights are reused at every invocation (Zamba2's memory
+trick), but each invocation keeps its OWN KV cache slot during decoding.
+The shared attention uses the sliding-window variant (cfg.sliding_window)
+so the hybrid stays sub-quadratic at long_500k — noted in DESIGN.md.
+
+Layer plan for L layers, every=k:  [k mamba] [shared] [k mamba] [shared] ...
+with the remainder (L mod k) mamba layers at the end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import maybe_constrain
+from repro.layers import attention as attn
+from repro.layers import mlp as mlp_lib
+from repro.layers import ssm
+from repro.layers.norms import rms_norm
+from repro.models.common import layer_scan
+
+
+def _plan(cfg):
+    """Returns list of stage sizes (mamba layers per stage); a shared-attn
+    invocation follows every stage except possibly the last."""
+    k, L = cfg.shared_attn_every, cfg.num_layers
+    sizes, rem = [], L
+    while rem > 0:
+        sizes.append(min(k, rem))
+        rem -= min(k, rem)
+    return sizes
+
+
+def num_attn_invocations(cfg):
+    sizes = _plan(cfg)
+    return sum(1 for i, s in enumerate(sizes)
+               if s == cfg.shared_attn_every and i < len(sizes))
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": (jax.random.normal(ks[0], (V, D), jnp.float32)
+                  * D ** -0.5).astype(dtype),
+        "unembed": (jax.random.normal(ks[1], (D, V), jnp.float32)
+                    * D ** -0.5).astype(dtype),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "mamba": {
+            "mix": ssm.init_mamba2(cfg, ks[2], dtype, num_layers=L),
+            "ln": jnp.ones((L, D), jnp.float32),
+        },
+        "shared": {
+            "attn": attn.init_attention(cfg, ks[4], dtype),
+            "ln1": jnp.ones((D,), jnp.float32),
+            "mlp": mlp_lib.init_swiglu(D, cfg.d_ff, ks[5], dtype),
+            "ln2": jnp.ones((D,), jnp.float32),
+        },
+    }
+
+
+def logical_axes(cfg):
+    return {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+        "mamba": {
+            "mix": ssm.mamba2_logical(stacked=True),
+            "ln": ("layers", "embed"),
+        },
+        "shared": {
+            "attn": attn.attention_logical(cfg, stacked=False),
+            "ln1": ("embed",),
+            "mlp": mlp_lib.swiglu_logical(stacked=False),
+            "ln2": ("embed",),
+        },
+    }
+
+
+def _slice_stage(tree, start, size):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size), tree)
+
+
+def _mamba_block(cfg, lp, x):
+    h, _ = ssm.mamba2_forward(cfg, lp["mix"], rms_norm(x, lp["ln"], cfg.norm_eps))
+    return x + h
+
+
+def _shared_block(cfg, sp, x, positions):
+    h, _ = attn.attn_forward(cfg, sp["attn"],
+                             rms_norm(x, sp["ln1"], cfg.norm_eps),
+                             positions, window=cfg.sliding_window)
+    x = x + h
+    h = mlp_lib.swiglu(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return x + h
+
+
+def forward(cfg, p, batch, *, remat: bool = True):
+    x = p["embed"][batch["tokens"]]
+    x = maybe_constrain(x, ("batch", None, None))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    sizes = _plan(cfg)
+
+    body = jax.checkpoint(_mamba_block, static_argnums=(0,)) if remat else _mamba_block
+
+    start = 0
+    for i, size in enumerate(sizes):
+        stage = _slice_stage(p["mamba"], start, size)
+
+        def scan_fn(carry, lp):
+            return body(cfg, lp, carry), None
+
+        x, _ = layer_scan(scan_fn, x, stage, cfg.unroll_layers)
+        start += size
+        if size == cfg.shared_attn_every:
+            x = _shared_block(cfg, p["shared"], x, positions)
+
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = (x @ p["unembed"]).astype(jnp.float32)
+    return maybe_constrain(logits, ("batch", None, "vocab")), jnp.zeros((), jnp.float32)
+
+
+def hidden_states(cfg, p, batch, *, remat: bool = True):
+    x = p["embed"][batch["tokens"]]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    body = jax.checkpoint(_mamba_block, static_argnums=(0,)) if remat else _mamba_block
+    start = 0
+    for size in _plan(cfg):
+        stage = _slice_stage(p["mamba"], start, size)
+
+        def scan_fn(carry, lp):
+            return body(cfg, lp, carry), None
+
+        x, _ = layer_scan(scan_fn, x, stage, cfg.unroll_layers)
+        start += size
+        if size == cfg.shared_attn_every:
+            x = _shared_block(cfg, p["shared"], x, positions)
+    return rms_norm(x, p["final_norm"], cfg.norm_eps)
+
+
+def prefill(cfg, p, batch):
+    """Encode a prompt; returns (last-position logits, decode cache)."""
+    x = p["embed"][batch["tokens"]]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    hs, convs, kss, vss = [], [], [], []
+    start = 0
+    for size in _plan(cfg):
+        stage = _slice_stage(p["mamba"], start, size)
+
+        def scan_fn(carry, lp):
+            xin = rms_norm(carry, lp["ln"], cfg.norm_eps)
+            y, st = ssm.mamba2_forward(cfg, lp["mix"], xin)
+            return carry + y, (st["h"], st["conv"])
+
+        x, (h_st, c_st) = layer_scan(scan_fn, x, stage, cfg.unroll_layers)
+        hs.append(h_st)
+        convs.append(c_st)
+        start += size
+        if size == cfg.shared_attn_every:
+            sp = p["shared"]
+            xin = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            y, (k, v) = attn.attn_forward(cfg, sp["attn"], xin, positions,
+                                          window=cfg.sliding_window)
+            x = x + y
+            y = mlp_lib.swiglu(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+            x = x + y
+            kss.append(k[:, -W:])
+            vss.append(v[:, -W:])
+    x = rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    logits = (x @ p["unembed"]).astype(jnp.float32)
+    if kss:
+        k_cache, v_cache = jnp.stack(kss), jnp.stack(vss)
+    else:  # tiny configs may have no shared-attn invocation at all
+        k_cache = jnp.zeros((0, B, W, cfg.num_kv_heads, cfg.head_dim), x.dtype)
+        v_cache = k_cache
+    cache = {"h": jnp.concatenate(hs), "conv": jnp.concatenate(convs),
+             "k": k_cache, "v": v_cache}
+    return logits, cache
+
+
+def loss_fn(cfg, p, batch):
+    logits, _ = forward(cfg, p, batch)
+    tgt = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = H * P
+    I = num_attn_invocations(cfg)
+    W = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    return {
+        "h": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, ssm.CONV_W - 1, din), dtype),
+        "k": jnp.zeros((I, batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((I, batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cache_logical(cfg):
+    return {"h": ("layers", "batch", "ssm_heads", None, None),
+            "conv": ("layers", "batch", None, "ssm_heads"),
+            "k": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": (None, "batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def decode_step(cfg, p, cache, token, pos):
+    x = p["embed"][token]  # (B,1,D)
+    sizes = _plan(cfg)
+    start, inv = 0, 0
+    hs, convs = cache["h"], cache["conv"]
+    ks, vs = cache["k"], cache["v"]
+
+    for size in sizes:
+        stage = _slice_stage(p["mamba"], start, size)
+        st_h = jax.lax.slice_in_dim(hs, start, start + size)
+        st_c = jax.lax.slice_in_dim(convs, start, start + size)
+
+        def scan_fn(x, inp):
+            lp, h, conv = inp
+            xin = rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, ns = ssm.mamba2_decode(cfg, lp["mix"], xin, {"h": h, "conv": conv})
+            return x + y, (ns["h"], ns["conv"])
+
+        x, (nh, nc) = layer_scan(scan_fn, x, (stage, st_h, st_c),
+                                 cfg.unroll_layers)
+        hs = jax.lax.dynamic_update_slice_in_dim(hs, nh, start, 0)
+        convs = jax.lax.dynamic_update_slice_in_dim(convs, nc, start, 0)
+        start += size
+        if size == cfg.shared_attn_every:
+            sp = p["shared"]
+            xin = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            y, (nk, nv) = attn.attn_decode(cfg, sp["attn"], xin,
+                                           (ks[inv], vs[inv]), pos)
+            x = x + y
+            y = mlp_lib.swiglu(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+            x = x + y
+            ks = ks.at[inv].set(nk)
+            vs = vs.at[inv].set(nv)
+            inv += 1
+
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = (x @ p["unembed"]).astype(jnp.float32)
+    return logits, {"h": hs, "conv": convs, "k": ks, "v": vs}

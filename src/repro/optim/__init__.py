@@ -1,0 +1,2 @@
+from repro.optim.optimizers import sgd, momentum, adamw, apply_updates, global_norm, clip_by_global_norm
+from repro.optim.schedules import constant, dynamic_paper, cosine, wsd, linear_warmup

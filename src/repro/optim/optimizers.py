@@ -1,0 +1,95 @@
+"""Minimal functional optimizers (no optax available offline).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, step, lr) -> (updates, state)``.
+Updates are ADDED to params by ``apply_updates``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd() -> Optimizer:
+    """Plain SGD — the paper's fine-tuning optimizer (Alg. 1/2 line 8/14)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step, lr):
+        del params, step
+        return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _zeros_like_f32(params)
+
+    def update(grads, state, params, step, lr):
+        del params, step
+        new_state = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: -lr * (beta * m + g.astype(jnp.float32)),
+                new_state, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_state)
+        return upd, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": _zeros_like_f32(params), "nu": _zeros_like_f32(params)}
+
+    def update(grads, state, params, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(m, v, p):
+            step_ = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return -lr * step_
+
+        return jax.tree.map(upd, mu, nu, params), {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,56 @@
+"""Learning-rate schedules.
+
+Includes the paper's dynamic rate (Section 4.3 / Tables 3 & 5: alpha = c/e —
+decay with the iteration counter, motivated by the Fig. 7b collapse under a
+wrong static rate) and the WSD (warmup-stable-decay) schedule required by the
+assigned minicpm-2b architecture [arXiv:2404.06395].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def dynamic_paper(c: float):
+    """Paper's alpha = c / e (e = 1-based epoch/iteration index)."""
+    def f(step):
+        e = jnp.maximum(jnp.asarray(step, jnp.float32), 0.0) + 1.0
+        return c / e
+    return f
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return base_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return f
+
+
+def cosine(base_lr: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1)) if warmup_steps else 1.0
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return f
+
+
+def wsd(base_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM). Exponential-style decay tail."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (s + 1.0) / max(warmup_steps, 1)
+        stable = jnp.asarray(base_lr, jnp.float32)
+        prog = jnp.clip((s - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0)
+        decay = base_lr * jnp.power(final_frac, prog)
+        return jnp.where(s < warmup_steps, warm,
+                         jnp.where(s < warmup_steps + stable_steps, stable, decay))
+    return f

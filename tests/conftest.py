@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own
+# device-count flag in its own process — never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

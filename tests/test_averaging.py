@@ -1,0 +1,79 @@
+"""Weight-averaging (the paper's Reduce) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.averaging import (average_member_dim, average_trees,
+                                  broadcast_member_dim, weighted_average_trees)
+
+RNG = np.random.default_rng(7)
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+            "b": {"inner": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}}
+
+
+def test_average_trees_is_mean():
+    ms = [_tree(i) for i in range(5)]
+    avg = average_trees(ms)
+    ref = np.mean([np.asarray(m["w"]) for m in ms], axis=0)
+    np.testing.assert_allclose(np.asarray(avg["w"]), ref, rtol=1e-6)
+
+
+def test_average_idempotent():
+    m = _tree(0)
+    avg = average_trees([m, m, m])
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(m["w"]),
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 6))
+def test_member_dim_equals_host_average(k):
+    """The multi-pod Reduce (mean over leading dim) == the host-level
+    list reduce (Alg. 2 lines 18-20)."""
+    ms = [_tree(100 + i) for i in range(k)]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ms)
+    a1 = average_member_dim(stacked)
+    a2 = average_trees(ms)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), rtol=1e-6), a1, a2)
+
+
+def test_broadcast_roundtrip():
+    m = _tree(3)
+    stacked = broadcast_member_dim(m, 4)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 4
+    back = average_member_dim(stacked)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), rtol=1e-6), back, m)
+
+
+def test_weighted_average_unequal_shards():
+    a, b = _tree(1), _tree(2)
+    w = weighted_average_trees([a, b], [3.0, 1.0])
+    ref = 0.75 * np.asarray(a["w"]) + 0.25 * np.asarray(b["w"])
+    np.testing.assert_allclose(np.asarray(w["w"]), ref, rtol=1e-6)
+
+
+def test_averaging_linear_models_equals_averaging_predictions():
+    """For linear models, weight averaging == prediction averaging — the
+    law-of-large-numbers argument in the paper's §2.1 holds exactly."""
+    x = jnp.asarray(RNG.normal(size=(32, 4)).astype(np.float32))
+    ws = [jnp.asarray(RNG.normal(size=(4, 2)).astype(np.float32))
+          for _ in range(5)]
+    avg_w = average_trees(ws)
+    pred_of_avg = x @ avg_w
+    avg_of_pred = sum(x @ w for w in ws) / 5.0
+    np.testing.assert_allclose(np.asarray(pred_of_avg),
+                               np.asarray(avg_of_pred), rtol=1e-5, atol=1e-6)
+
+
+def test_average_preserves_dtype():
+    ms = [jax.tree.map(lambda a: a.astype(jnp.bfloat16), _tree(i))
+          for i in range(3)]
+    avg = average_trees(ms)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(avg))

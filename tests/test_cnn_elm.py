@@ -1,0 +1,108 @@
+"""End-to-end CNN-ELM behaviour (paper Algorithm 2 + §4 experiments,
+miniaturised for CI)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_reduced_config
+from repro.core import cnn_elm, elm
+from repro.data.partition import partition_by_class, partition_iid
+from repro.data.synthetic import make_extended_mnist, make_not_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+CFG = get_reduced_config("cnn_elm_6c12c")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def mnist_like():
+    ds = make_extended_mnist(n_per_class=40, seed=0)
+    return ds.split(n_test=200, seed=1)
+
+
+def test_feature_dim_matches_model(mnist_like):
+    train, _ = mnist_like
+    params = cnn.init_params(CFG, KEY)
+    h = cnn.features(CFG, params, train.x[:8])
+    assert h.shape == (8, cnn.feature_dim(CFG))
+    assert np.all(np.isfinite(np.asarray(h)))
+
+
+def test_elm_only_beats_chance(mnist_like):
+    """e=0 (Tables 2/4): random-kernel CNN + closed-form ELM readout must
+    clearly beat the 10% chance level."""
+    train, test = mnist_like
+    part = partition_iid(train.x, train.y, k=1)[0]
+    params = cnn.init_params(CFG, KEY)
+    model = cnn_elm.train_member(CFG, params, part, epochs=0,
+                                 lr_schedule=None, batch_size=128)
+    acc = cnn_elm.evaluate(CFG, model, test.x, test.y)
+    assert acc > 0.4, acc
+
+
+def test_sgd_epochs_do_not_collapse(mnist_like):
+    """e>0 with the paper's dynamic rate: fine-tuning must not collapse
+    accuracy (Fig. 7b shows collapse only under a WRONG static rate)."""
+    train, test = mnist_like
+    part = partition_iid(train.x, train.y, k=1)[0]
+    params = cnn.init_params(CFG, KEY)
+    m0 = cnn_elm.train_member(CFG, params, part, epochs=0,
+                              lr_schedule=None, batch_size=128)
+    m1 = cnn_elm.train_member(CFG, params, part, epochs=2,
+                              lr_schedule=dynamic_paper(0.05), batch_size=128)
+    a0 = cnn_elm.evaluate(CFG, m0, test.x, test.y)
+    a1 = cnn_elm.evaluate(CFG, m1, test.x, test.y)
+    assert a1 > a0 - 0.05, (a0, a1)
+
+
+def test_averaging_iid_close_to_monolithic(mnist_like):
+    """Table 4: with IID partitions, Average-k ~= no-partition model."""
+    train, test = mnist_like
+    parts = partition_iid(train.x, train.y, k=4, seed=0)
+    members, avg = cnn_elm.distributed_cnn_elm(
+        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=128)
+    mono = cnn_elm.train_member(CFG, cnn.init_params(CFG, KEY),
+                                partition_iid(train.x, train.y, 1)[0],
+                                epochs=0, lr_schedule=None, batch_size=128)
+    acc_avg = cnn_elm.evaluate(CFG, avg, test.x, test.y)
+    acc_mono = cnn_elm.evaluate(CFG, mono, test.x, test.y)
+    assert acc_avg > acc_mono - 0.10, (acc_avg, acc_mono)
+
+
+def test_averaging_noniid_degrades_but_beats_members():
+    """Table 2: class-skewed partitions hurt the average, but the average
+    still beats individual members trained on their skewed shard."""
+    cfg = get_reduced_config("cnn_elm_3c9c")
+    ds = make_not_mnist(n_per_class=30, seed=2)
+    train, test = ds.split(n_test=200, seed=3)
+    parts = partition_by_class(train.x, train.y, k=2)
+    members, avg = cnn_elm.distributed_cnn_elm(
+        cfg, parts, KEY, epochs=0, lr_schedule=None, batch_size=64)
+    acc_avg = cnn_elm.evaluate(cfg, avg, test.x, test.y)
+    member_accs = [cnn_elm.evaluate(cfg, m, test.x, test.y) for m in members]
+    # members see only half the classes -> cap ~50%; average must beat them
+    assert acc_avg > max(member_accs) - 0.02, (acc_avg, member_accs)
+
+
+def test_same_init_across_members():
+    """Alg. 2 line 3: all machines start from identical CNN weights."""
+    ds = make_extended_mnist(n_per_class=10, seed=5)
+    parts = partition_iid(ds.x, ds.y, k=3)
+    init = cnn.init_params(CFG, KEY)
+    # train_member must not mutate the shared init
+    m = cnn_elm.train_member(CFG, init, parts[0], epochs=1,
+                             lr_schedule=dynamic_paper(0.01), batch_size=64)
+    h0 = np.asarray(init["stages"][0]["w"])
+    assert np.all(np.isfinite(np.asarray(m.cnn_params["stages"][0]["w"])))
+    np.testing.assert_array_equal(h0, np.asarray(init["stages"][0]["w"]))
+
+
+def test_kappa_range(mnist_like):
+    train, test = mnist_like
+    part = partition_iid(train.x, train.y, k=1)[0]
+    model = cnn_elm.train_member(CFG, cnn.init_params(CFG, KEY), part,
+                                 epochs=0, lr_schedule=None, batch_size=128)
+    kap = cnn_elm.kappa(CFG, model, test.x, test.y)
+    assert -1.0 <= kap <= 1.0
+    assert kap > 0.3  # should correlate strongly above chance

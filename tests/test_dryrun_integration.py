@@ -1,0 +1,43 @@
+"""End-to-end dry-run integration: run the REAL launcher (512 fake host
+devices, production 16x16 / 2x16x16 meshes) for one cheap combo in a
+subprocess and validate the report schema. This is the same entry point
+that produced every artifact in experiments/dryrun/."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_launcher_one_combo(tmp_path, mesh):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6_3b", "--shape", "long_500k",
+         "--mesh", mesh, "--out", str(tmp_path)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    tag = "2x16x16" if mesh == "multi" else "16x16"
+    report = json.load(open(tmp_path / f"rwkv6_3b__long_500k__{tag}.json"))
+    assert report["chips"] == (512 if mesh == "multi" else 256)
+    assert report["kind"] == "decode"
+    r = report["roofline"]
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["t_compute_s"] > 0 and r["t_memory_s"] > 0
+    assert report["memory"]["argument_bytes_per_device"] > 0
+
+
+def test_dryrun_skip_notes_encoder_only(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "hubert_xlarge", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    report = json.load(open(tmp_path / "hubert_xlarge__decode_32k__16x16.json"))
+    assert report["skipped"] and "encoder-only" in report["reason"]

@@ -1,0 +1,126 @@
+"""Backbone-agnostic ELM head (the paper's integration, generalised) +
+§Perf regression tests for the exact-semantics optimizations."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_reduced_config, replace
+from repro.core import elm, elm_head
+from repro.models import api, rwkv6
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _make_task(C=6, F=512, seed=0):
+    rng = np.random.default_rng(seed)
+    class_emb = rng.normal(size=(C, F)).astype(np.float32)
+
+    def make_batch(s):
+        r = np.random.default_rng(1000 + s)
+        y = r.integers(0, C, size=(2, 32))
+        frames = class_emb[y] + 0.4 * r.normal(size=(2, 32, F))
+        return {"frames": jnp.asarray(frames, jnp.bfloat16),
+                "targets": jnp.asarray(y, jnp.int32)}
+
+    return make_batch, C
+
+
+def test_elm_head_learns_frame_classification():
+    cfg = get_reduced_config("hubert_xlarge")
+    params = api.init_params(cfg, KEY)
+    make_batch, C = _make_task()
+    feature_fn = functools.partial(lambda p, b: api.hidden_states(cfg, p, b))
+    stats = None
+    for i in range(6):
+        stats = elm_head.accumulate_stats(feature_fn, params, make_batch(i),
+                                          C, stats)
+    beta = elm_head.solve(stats, lam=100.0)
+    b = make_batch(99)
+    scores = elm_head.predict(feature_fn, params, beta, b)
+    pred = jnp.argmax(scores, -1).reshape(b["targets"].shape)
+    acc = float(jnp.mean((pred == b["targets"]).astype(jnp.float32)))
+    assert acc > 0.5, acc  # random backbone + closed-form head >> 1/6 chance
+
+
+def test_finetune_step_reduces_elm_loss():
+    """Algorithm 2 lines 13-14, generalised to a transformer backbone."""
+    cfg = get_reduced_config("qwen3_8b")
+    params = api.init_params(cfg, KEY)
+    k1, k2 = jax.random.split(KEY)
+    stats_batch = {"tokens": jax.random.randint(k1, (2, 32), 0, cfg.vocab_size),
+                   "targets": jax.random.randint(k1, (2, 32), 0, 16)}
+    batch = {"tokens": jax.random.randint(k2, (2, 32), 0, cfg.vocab_size),
+             "targets": jax.random.randint(k2, (2, 32), 0, 16)}
+    feature_fn = functools.partial(lambda p, b: api.hidden_states(cfg, p, b))
+    # beta solved on held-out stats so the finetune batch has real residual
+    stats = elm_head.accumulate_stats(feature_fn, params, stats_batch, 16)
+    beta = elm_head.solve(stats, lam=10.0)
+    losses = []
+    p = params
+    for _ in range(4):
+        p, l = elm_head.finetune_step(feature_fn, p, beta, batch, 16, lr=1e-2)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+
+
+def test_stats_accumulation_matches_single_pass():
+    cfg = get_reduced_config("hubert_xlarge")
+    params = api.init_params(cfg, KEY)
+    make_batch, C = _make_task()
+    feature_fn = functools.partial(lambda p, b: api.hidden_states(cfg, p, b))
+    b1, b2 = make_batch(0), make_batch(1)
+    s12 = elm_head.accumulate_stats(feature_fn, params, b2, C,
+                                    elm_head.accumulate_stats(
+                                        feature_fn, params, b1, C))
+    big = {"frames": jnp.concatenate([b1["frames"], b2["frames"]]),
+           "targets": jnp.concatenate([b1["targets"], b2["targets"]])}
+    s_big = elm_head.accumulate_stats(feature_fn, params, big, C)
+    np.testing.assert_allclose(np.asarray(s12.u), np.asarray(s_big.u),
+                               rtol=2e-2, atol=2e-1)
+
+
+# ---------------------------------------------------------------------------
+# §Perf exact-semantics regressions
+# ---------------------------------------------------------------------------
+
+def test_rwkv_head_padding_is_exact():
+    cfg = get_reduced_config("rwkv6_3b")       # d=128 -> 2 heads
+    cfgp = replace(cfg, rwkv_head_pad_to=4)    # pad 2 -> 4
+    params = rwkv6.init_params(cfg, KEY)
+    padded = rwkv6.pad_head_params(params, cfg, cfgp)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    l1, _ = rwkv6.forward(cfg, params, {"tokens": toks})
+    l2, _ = rwkv6.forward(cfgp, padded, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_rwkv_head_padding_grads_stay_zero():
+    cfg = replace(get_reduced_config("rwkv6_3b"), rwkv_head_pad_to=4)
+    params = rwkv6.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+
+    def loss(p):
+        lg, _ = rwkv6.forward(cfg, p, {"tokens": toks})
+        return jnp.mean(lg ** 2)
+
+    g = jax.grad(loss)(params)
+    D = cfg.d_model
+    assert float(jnp.max(jnp.abs(g["layers"]["w_k"][:, :, D:]))) == 0.0
+    assert float(jnp.max(jnp.abs(g["layers"]["w_o"][:, D:, :]))) == 0.0
+
+
+def test_moe_combine_sharding_modes_agree():
+    """The §Perf combine-sharding knob only changes layouts, never math."""
+    from repro.models import transformer
+    base = get_reduced_config("olmoe_1b_7b")
+    toks = jax.random.randint(KEY, (2, 16), 0, base.vocab_size)
+    outs = []
+    for mode in ("expert", "batch", "none"):
+        cfg = replace(base, moe_combine_sharding=mode)
+        params = api.init_params(cfg, KEY)
+        lg, _ = transformer.forward(cfg, params, {"tokens": toks})
+        outs.append(np.asarray(lg, np.float32))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])

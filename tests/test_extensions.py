@@ -1,0 +1,188 @@
+"""Beyond-paper extensions: fused RMSNorm kernel, Polyak averaging
+(paper §2.1 citation), elastic membership, HLO collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import elm
+from repro.core.elastic import ElasticGroup
+from repro.core.polyak import polyak_init, polyak_params, polyak_update
+from repro.kernels.rmsnorm import ops as rms_ops
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.launch import hlo_analysis
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 64, 256), jnp.float32),
+    ((2, 128), jnp.float32),
+    ((3, 17, 96), jnp.bfloat16),   # row count not a block multiple
+    ((1, 1, 512), jnp.float32),
+])
+def test_rmsnorm_kernel_matches_ref(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape).astype(np.float32)).astype(dtype)
+    scale = jnp.asarray(RNG.normal(size=shape[-1]).astype(np.float32))
+    out = rms_ops.rmsnorm(x, scale, use_pallas=True)
+    ref = rmsnorm_ref(x, scale, 1e-5)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 300), d=st.integers(8, 128))
+def test_rmsnorm_kernel_property(n, d):
+    rng = np.random.default_rng(n * 31 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    s = jnp.ones((d,), jnp.float32)
+    out = rms_ops.rmsnorm(x, s, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(rmsnorm_ref(x, s, 1e-5)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Polyak-Ruppert averaging
+# ---------------------------------------------------------------------------
+
+def test_polyak_average_is_mean_of_iterates():
+    params = {"w": jnp.zeros(3)}
+    st_ = polyak_init(params)
+    iterates = [jnp.asarray([float(i), 0.0, 1.0]) for i in range(1, 6)]
+    for it in iterates:
+        st_ = polyak_update(st_, {"w": it})
+    avg = polyak_params(st_)
+    np.testing.assert_allclose(np.asarray(avg["w"]),
+                               np.mean([np.asarray(i) for i in iterates], 0),
+                               rtol=1e-6)
+
+
+def test_polyak_burn_in_skips_transient():
+    st_ = polyak_init({"w": jnp.zeros(1)})
+    for step in range(10):
+        st_ = polyak_update(st_, {"w": jnp.asarray([float(step)])},
+                            step=step, burn_in=5)
+    # only steps 5..9 averaged -> mean 7
+    np.testing.assert_allclose(float(polyak_params(st_)["w"][0]), 7.0)
+
+
+def test_polyak_reduces_noise_on_sgd():
+    """Averaged SGD beats the last iterate IN EXPECTATION (Polyak &
+    Juditsky 1992) — compared over seeds, not a single trajectory."""
+    last_sq, avg_sq = [], []
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray([5.0])
+        st_ = polyak_init({"w": w})
+        for step in range(300):
+            g = 2 * w + jnp.asarray(rng.normal(0, 2.0, (1,)).astype(np.float32))
+            w = w - 0.05 * g
+            st_ = polyak_update(st_, {"w": w}, step=step, burn_in=100)
+        last_sq.append(float(w[0]) ** 2)
+        avg_sq.append(float(polyak_params(st_)["w"][0]) ** 2)
+    assert np.mean(avg_sq) < np.mean(last_sq), (np.mean(avg_sq),
+                                                np.mean(last_sq))
+
+
+# ---------------------------------------------------------------------------
+# elastic membership
+# ---------------------------------------------------------------------------
+
+def _stats_of(h, t):
+    return elm.batch_stats(jnp.asarray(h), jnp.asarray(t))
+
+
+def test_elastic_join_leave_weighted_average():
+    g = ElasticGroup()
+    g.join("a", init_params={"w": jnp.asarray([0.0])})
+    g.record_step("a", {"w": jnp.asarray([1.0])}, n=3.0)
+    g.join("b")  # starts from current average (=1.0)
+    np.testing.assert_allclose(float(g.members["b"].params["w"][0]), 1.0)
+    g.record_step("b", {"w": jnp.asarray([5.0])}, n=1.0)
+    # weighted: (3*1 + 1*5)/4 = 2
+    np.testing.assert_allclose(float(g.reduce_params()["w"][0]), 2.0)
+    g.leave("b")
+    # retired member still contributes
+    np.testing.assert_allclose(float(g.reduce_params()["w"][0]), 2.0)
+
+
+def test_elastic_stats_merge_exact():
+    rng = np.random.default_rng(0)
+    h = rng.normal(size=(60, 8)).astype(np.float32)
+    t = rng.normal(size=(60, 2)).astype(np.float32)
+    g = ElasticGroup()
+    g.join("a", init_params={"w": jnp.zeros(1)})
+    g.record_stats("a", _stats_of(h[:20], t[:20]))
+    g.join("b")
+    g.record_stats("b", _stats_of(h[20:50], t[20:50]))
+    g.leave("b")  # stats survive departure
+    g.record_stats("a", _stats_of(h[50:], t[50:]))
+    beta = g.solve_head(lam=100.0)
+    ref = elm.solve_beta(_stats_of(h, t), lam=100.0)
+    np.testing.assert_allclose(np.asarray(beta), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vocab_padding_is_exact():
+    """§Perf D-series: padded vocab (masked logits) computes the exact
+    unpadded function — logits on real slots and CE loss bit-identical."""
+    from repro.configs.base import get_reduced_config, replace
+    from repro.models import api, transformer
+    cfg = get_reduced_config("minicpm_2b")   # vocab 513 (odd on purpose)
+    cfgp = replace(cfg, vocab_pad_to=16)     # -> 528
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    emb = jnp.pad(params["embed"],
+                  ((0, cfgp.padded_vocab - cfg.vocab_size), (0, 0)))
+    paramsp = {**params, "embed": emb}
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    l1, _ = transformer.forward(cfg, params, {"tokens": toks})
+    l2, _ = transformer.forward(cfgp, paramsp, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(l1),
+                                  np.asarray(l2[..., :cfg.vocab_size]))
+    batch = {"tokens": toks, "targets": jnp.ones((2, 16), jnp.int32)}
+    c1, _ = api.loss_fn(cfg, params, batch)
+    c2, _ = api.loss_fn(cfgp, paramsp, batch)
+    assert float(c1) == float(c2)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[8,512]{1,0} all-gather(bf16[8,32]{1,0} %y), dimensions={1}
+  %rs = (f32[4,4]{1,0}, f32[4,4]{1,0}) reduce-scatter(f32[16,4]{1,0} %a, f32[16,4]{1,0} %b)
+  %cp = u32[128]{0} collective-permute(u32[128]{0} %c)
+  %dot = f32[16,1024]{1,0} dot(f32[16,8]{1,0} %p, f32[8,1024]{1,0} %q)
+"""
+
+
+def test_collective_stats_parse():
+    st_ = hlo_analysis.collective_stats(HLO_SAMPLE)
+    assert st_.count_by_kind == {"all-reduce": 1, "all-gather": 1,
+                                 "reduce-scatter": 1, "collective-permute": 1}
+    ar = 16 * 1024 * 4
+    ag = 8 * 512 * 2
+    rs = 2 * 4 * 4 * 4
+    cp = 128 * 4
+    assert st_.raw_bytes_by_kind["all-reduce"] == ar
+    # weighting: all-reduce 2x, others 1x; dot must NOT be counted
+    np.testing.assert_allclose(st_.per_chip_bytes, 2 * ar + ag + rs + cp)
+
+
+def test_roofline_terms_dominance():
+    t = hlo_analysis.roofline_terms(flops=1e18, hbm_bytes=1e12,
+                                    per_chip_coll_bytes=1e9, chips=256)
+    assert t["dominant"] == "compute"
+    t = hlo_analysis.roofline_terms(flops=1e12, hbm_bytes=1e12,
+                                    per_chip_coll_bytes=5e12, chips=256)
+    assert t["dominant"] == "collective"

@@ -1,0 +1,118 @@
+"""Deliverable (f): per-architecture smoke tests — REDUCED variant of each
+assigned family (<=2 layers, d_model<=512, <=4 experts), one forward/train
+step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs.base import ARCH_IDS, get_config, get_reduced_config
+from repro.core import trainer
+from repro.models import api
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+LM_ARCHS = [a for a in ARCH_IDS if not a.startswith("cnn_elm")]
+
+
+def _batch(cfg, with_targets=True):
+    if cfg.frontend == "audio":
+        b = {"frames": jnp.ones((B, S, 512), jnp.bfloat16)}
+        tshape = (B, S)
+    elif cfg.frontend == "vision":
+        P = cfg.num_prefix_tokens
+        b = {"tokens": jnp.full((B, S - P), 3, jnp.int32),
+             "patches": jnp.ones((B, P, 1024), jnp.bfloat16)}
+        tshape = (B, S - P)
+    else:
+        b = {"tokens": jnp.full((B, S), 3, jnp.int32)}
+        tshape = (B, S)
+    if with_targets:
+        b["targets"] = jnp.ones(tshape, jnp.int32)
+    return b, tshape
+
+
+def test_reduced_configs_respect_limits():
+    for arch in LM_ARCHS:
+        cfg = get_reduced_config(arch)
+        assert cfg.num_layers <= 2, arch
+        assert cfg.d_model <= 512, arch
+        if cfg.family == "moe":
+            assert cfg.num_experts <= 4, arch
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+        "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151936),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+        "minicpm_2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen3_8b": (36, 4096, 32, 8, 12288, 151936),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        "internvl2_26b": (48, 6144, 48, 8, 16384, 92553),
+    }
+    for arch, (L, D, H, KV, F, V) in spec.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff if c.family != "moe" else c.moe_d_ff,
+                c.vocab_size) == (L, D, H, KV, F, V), arch
+    r = get_config("rwkv6_3b")
+    assert (r.num_layers, r.d_model, r.d_ff, r.vocab_size) == (32, 2560, 8960, 65536)
+    z = get_config("zamba2_1p2b")
+    assert z.ssm_state == 64
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_reduced_config(arch)
+    params = api.init_params(cfg, KEY)
+    batch, tshape = _batch(cfg, with_targets=False)
+    mod = api.module_of(cfg)
+    logits, _aux = mod.forward(cfg, params, batch)
+    assert logits.shape == (*tshape, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_one_train_step_no_nans(arch):
+    cfg = get_reduced_config(arch)
+    params = api.init_params(cfg, KEY)
+    batch, _ = _batch(cfg)
+    opt = optim.adamw()
+    step = trainer.make_train_step(cfg, opt, optim.constant(1e-3))
+    p2, o2, s2, metrics = jax.jit(step)(params, opt.init(params),
+                                        jnp.zeros((), jnp.int32), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(p2):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+    # params must actually change
+    changed = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_hidden_states_for_elm_head(arch):
+    """Every backbone must expose H for the paper's ELM readout."""
+    cfg = get_reduced_config(arch)
+    params = api.init_params(cfg, KEY)
+    batch, tshape = _batch(cfg, with_targets=False)
+    h = api.hidden_states(cfg, params, batch)
+    assert h.shape == (*tshape, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(h, np.float32)))
+
+
+def test_param_count_close_to_assignment():
+    """Sanity-check analytic param counts against the arch names."""
+    approx = {
+        "internlm2_20b": 20e9, "qwen3_32b": 32e9, "qwen3_8b": 8e9,
+        "minicpm_2b": 2.7e9, "olmoe_1b_7b": 7e9, "rwkv6_3b": 3e9,
+        "zamba2_1p2b": 1.2e9, "hubert_xlarge": 1e9,
+    }
+    for arch, expect in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.4 * expect < n < 2.6 * expect, (arch, n, expect)

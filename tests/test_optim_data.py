@@ -1,0 +1,156 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.lm_data import TokenDatasetSpec, synthetic_token_batches
+from repro.data.partition import (batches, partition_by_class,
+                                  partition_contiguous, partition_iid)
+from repro.data.synthetic import add_noise, make_extended_mnist, make_not_mnist
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quadratic_descends(opt, lr=0.1, steps=150):
+    w = jnp.asarray([3.0, -2.0])
+    state = opt.init(w)
+    for s in range(steps):
+        g = 2 * w
+        upd, state = opt.update(g, state, w, jnp.asarray(s), lr)
+        w = optim.apply_updates(w, upd)
+    return float(jnp.sum(w * w))
+
+
+@pytest.mark.parametrize("name,opt", [
+    ("sgd", optim.sgd()), ("momentum", optim.momentum(0.9)),
+    ("adamw", optim.adamw()),
+])
+def test_optimizers_descend_quadratic(name, opt):
+    assert _quadratic_descends(opt) < 1e-2, name
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    assert abs(float(optim.global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_schedules():
+    dyn = optim.dynamic_paper(5.0)  # the paper's alpha = 5/e (Table 3)
+    np.testing.assert_allclose(float(dyn(0)), 5.0)
+    np.testing.assert_allclose(float(dyn(4)), 1.0)
+    w = optim.wsd(1.0, warmup_steps=10, stable_steps=50, decay_steps=20)
+    assert float(w(0)) < 0.2
+    np.testing.assert_allclose(float(w(30)), 1.0)
+    assert float(w(85)) < 0.5
+    c = optim.cosine(1.0, 100, warmup_steps=10)
+    assert float(c(5)) < 1.0 and float(c(99)) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_partition_iid_sizes_and_disjoint():
+    ds = make_extended_mnist(n_per_class=20)
+    parts = partition_iid(ds.x, ds.y, k=3, seed=0)
+    p = len(ds.x) // 3  # paper line 1: P = floor(m/k)
+    assert all(len(q.x) == p for q in parts)
+
+
+def test_partition_by_class_is_skewed():
+    ds = make_not_mnist(n_per_class=20)
+    parts = partition_by_class(ds.x, ds.y, k=2)
+    classes0 = set(np.unique(parts[0].y).tolist())
+    classes1 = set(np.unique(parts[1].y).tolist())
+    # shards see (almost) disjoint class subsets — the non-IID regime
+    assert len(classes0 & classes1) <= 1
+
+
+def test_partition_iid_covers_all_classes():
+    ds = make_extended_mnist(n_per_class=30)
+    for part in partition_iid(ds.x, ds.y, k=4, seed=1):
+        assert len(np.unique(part.y)) == 10
+
+
+def test_notmnist_contiguous_is_noniid():
+    ds = make_not_mnist(n_per_class=20)  # class-blocked layout
+    parts = partition_contiguous(ds.x, ds.y, k=2)
+    assert set(np.unique(parts[0].y)) != set(np.unique(parts[1].y))
+
+
+@pytest.mark.parametrize("kind", ["gaussian", "salt_pepper", "poisson"])
+def test_noise_models(kind):
+    img = RNG.random((4, 28, 28)).astype(np.float32)
+    out = add_noise(img, kind, RNG)
+    assert out.shape == img.shape
+    assert out.min() >= 0.0 and out.max() <= 1.0
+    assert not np.allclose(out, img)
+
+
+def test_extended_mnist_is_3x_extended():
+    base = 10 * 7
+    ds = make_extended_mnist(n_per_class=7)
+    assert len(ds.x) == 4 * base  # original + 3 noise copies
+
+
+def test_batches_deterministic():
+    ds = make_extended_mnist(n_per_class=10)
+    part = partition_iid(ds.x, ds.y, 1)[0]
+    b1 = [y for _, y in batches(part, 32, seed=5)]
+    b2 = [y for _, y in batches(part, 32, seed=5)]
+    for a, b in zip(b1, b2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_token_stream_deterministic_and_member_disjoint():
+    spec = TokenDatasetSpec(vocab_size=1000, seq_len=32, batch_size=2)
+    a1, _ = next(synthetic_token_batches(spec, member=0))
+    a2, _ = next(synthetic_token_batches(spec, member=0))
+    np.testing.assert_array_equal(a1, a2)
+    b1, _ = next(synthetic_token_batches(spec, member=1))
+    assert not np.array_equal(a1, b1)
+
+
+def test_token_targets_are_shifted_inputs():
+    spec = TokenDatasetSpec(vocab_size=500, seq_len=16, batch_size=2)
+    toks, tgt = next(synthetic_token_batches(spec))
+    np.testing.assert_array_equal(toks[:, 1:], tgt[:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layers": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "stages": ({"a": jnp.ones(2)}, {"a": jnp.zeros(2)})},
+            "beta": jnp.asarray([1.5])}
+    save_checkpoint(str(tmp_path), "averaged", 7, tree, {"note": "test"})
+    restored, meta = restore_checkpoint(str(tmp_path), "averaged")
+    assert meta["step"] == 7 and meta["metadata"]["note"] == "test"
+    np.testing.assert_array_equal(np.asarray(tree["layers"]["w"]),
+                                  restored["layers"]["w"])
+    np.testing.assert_array_equal(
+        np.asarray(tree["layers"]["stages"][1]["a"]),
+        restored["layers"]["stages"][1]["a"])
+
+
+def test_checkpoint_latest_step(tmp_path):
+    t = {"w": jnp.ones(2)}
+    for s in (1, 5, 3):
+        save_checkpoint(str(tmp_path), "m", s, t)
+    assert latest_step(str(tmp_path), "m") == 5
+    _, meta = restore_checkpoint(str(tmp_path), "m")
+    assert meta["step"] == 5

@@ -1,0 +1,105 @@
+"""SimuParallelSGD (Alg. 1) + the SPMD member-stacked deployment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.averaging import average_trees
+from repro.core.parallel_sgd import (make_stacked_train_step, simu_parallel_sgd,
+                                     stacked_average)
+
+RNG = np.random.default_rng(0)
+
+# least squares: w* minimises ||X w - y||^2
+DIM = 6
+W_TRUE = RNG.normal(size=(DIM,)).astype(np.float32)
+
+
+def _make_iter(seed, shift=0.0):
+    rng = np.random.default_rng(seed)
+
+    def gen():
+        while True:
+            x = rng.normal(size=(32, DIM)).astype(np.float32) + shift
+            y = x @ W_TRUE + 0.01 * rng.normal(size=32).astype(np.float32)
+            yield jnp.asarray(x), jnp.asarray(y)
+
+    return gen()
+
+
+def _train_step(params, state, batch):
+    x, y = batch
+
+    def loss(w):
+        return jnp.mean((x @ w - y) ** 2)
+
+    g = jax.grad(loss)(params)
+    return params - 0.05 * g, state, float(loss(params))
+
+
+def test_parallel_sgd_converges_iid():
+    iters = [_make_iter(i) for i in range(4)]
+    w0 = jnp.zeros((DIM,), jnp.float32)
+    avg, members, _ = simu_parallel_sgd(w0, _train_step, iters, num_steps=300)
+    np.testing.assert_allclose(np.asarray(avg), W_TRUE, atol=0.05)
+
+
+def test_average_of_members_beats_worst_member():
+    iters = [_make_iter(i, shift=0.5 * i) for i in range(3)]  # non-IID
+    w0 = jnp.zeros((DIM,), jnp.float32)
+    avg, members, _ = simu_parallel_sgd(w0, _train_step, iters, num_steps=200)
+
+    xe = jnp.asarray(RNG.normal(size=(512, DIM)).astype(np.float32))
+    ye = xe @ W_TRUE
+
+    def mse(w):
+        return float(jnp.mean((xe @ w - ye) ** 2))
+
+    assert mse(avg) <= max(mse(m) for m in members) + 1e-6
+
+
+def test_tau1_equals_synchronous_data_parallel():
+    """avg_period=1 must equal synchronous DP on the averaged gradient
+    (for a quadratic loss with equal lr this holds exactly per step)."""
+    iters = [_make_iter(100 + i) for i in range(2)]
+    batches = [[next(it) for _ in range(5)] for it in iters]
+
+    w0 = jnp.zeros((DIM,), jnp.float32)
+    its = [iter(b) for b in batches]
+    avg_tau1, _, _ = simu_parallel_sgd(w0, _train_step, its, num_steps=5,
+                                       avg_period=1)
+
+    # reference: at each step, average the two post-step weights
+    w = w0
+    for t in range(5):
+        outs = [_train_step(w, None, batches[i][t])[0] for i in range(2)]
+        w = average_trees(outs)
+    np.testing.assert_allclose(np.asarray(avg_tau1), np.asarray(w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_stacked_member_step_matches_host_loop():
+    """The SPMD (vmapped member-dim) Map must equal the host-level loop."""
+
+    def member_step(params, opt_state, step, batch):
+        x, y = batch
+        g = jax.grad(lambda w: jnp.mean((x @ w - y) ** 2))(params)
+        return params - 0.05 * g, opt_state, step + 1, jnp.zeros(())
+
+    stacked_step = make_stacked_train_step(member_step)
+    k = 3
+    params = jnp.stack([jnp.zeros(DIM), jnp.ones(DIM), -jnp.ones(DIM)])
+    xs = jnp.asarray(RNG.normal(size=(k, 32, DIM)).astype(np.float32))
+    ys = jnp.einsum("kbd,d->kb", xs, jnp.asarray(W_TRUE))
+    out, _, _, _ = stacked_step(params, jnp.zeros(k), jnp.zeros(k, jnp.int32),
+                                (xs, ys))
+    for i in range(k):
+        ref, _, _, _ = member_step(params[i], 0.0, 0, (xs[i], ys[i]))
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref),
+                                   rtol=1e-6)
+
+    # Reduce: stacked average == mean + broadcast
+    avg = stacked_average(out)
+    ref_avg = jnp.mean(out, axis=0)
+    for i in range(k):
+        np.testing.assert_allclose(np.asarray(avg[i]), np.asarray(ref_avg),
+                                   rtol=1e-6)
