@@ -24,9 +24,10 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def save_result(name: str, payload):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
+def save_result(name: str, payload, out_dir: str = None):
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path

@@ -1,0 +1,83 @@
+"""Map-phase wall-clock: sequential ``train_member`` loop vs the stacked
+vmap + lax.scan fast path (one device dispatch per epoch).
+
+The sequential reference dispatches 3 jit calls per batch per member from
+the host (feature/stats, β solve, SGD step); the stacked path trains all k
+members in one donated scan. The ratio is the host-dispatch overhead the
+paper's "embarrassingly parallel Map" leaves on the table when driven batch
+by batch from Python.
+
+Emits ``experiments/BENCH_map_phase.json``:
+
+  sequential_us / stacked_us — mean wall-clock per full training run (µs)
+  speedup                    — sequential_us / stacked_us
+  k, epochs, num_batches, batch_size, feature_dim, backend — the workload
+
+Run standalone: ``PYTHONPATH=src python -m benchmarks.map_phase`` (or via
+``benchmarks/run.py``).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_result, time_call
+from repro.configs.base import get_reduced_config
+from repro.core import cnn_elm
+from repro.data.partition import partition_iid
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+
+def run(k: int = 4, n_per_class: int = 40, epochs: int = 2,
+        batch_size: int = 32, iters: int = 3, out_dir: str = None):
+    """Time both Map-phase implementations on one synthetic workload and
+    persist the comparison. Returns the payload dict."""
+    cfg = get_reduced_config("cnn_elm_6c12c")
+    ds = make_extended_mnist(n_per_class=n_per_class, seed=0)
+    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
+    init = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    lr = dynamic_paper(0.05)
+
+    def sequential():
+        members = [cnn_elm.train_member(cfg, init, p, epochs=epochs,
+                                        lr_schedule=lr,
+                                        batch_size=batch_size, seed=1000 + i)
+                   for i, p in enumerate(parts)]
+        return cnn_elm.average_models(members).beta
+
+    def stacked():
+        sm = cnn_elm.train_members_stacked(cfg, init, parts, epochs=epochs,
+                                           lr_schedule=lr,
+                                           batch_size=batch_size)
+        return sm.averaged().beta
+
+    seq_us = time_call(sequential, warmup=1, iters=iters)
+    st_us = time_call(stacked, warmup=1, iters=iters)
+
+    num_batches = (len(parts[0].x) // batch_size)
+    payload = {
+        "sequential_us": seq_us,
+        "stacked_us": st_us,
+        "speedup": seq_us / st_us,
+        "k": k,
+        "epochs": epochs,
+        "num_batches": num_batches,
+        "batch_size": batch_size,
+        "feature_dim": cnn.feature_dim(cfg),
+        "backend": jax.default_backend(),
+    }
+    save_result("BENCH_map_phase", payload, out_dir=out_dir)
+    emit(f"map_phase_sequential_k{k}_e{epochs}", seq_us, "host loop")
+    emit(f"map_phase_stacked_k{k}_e{epochs}", st_us,
+         f"vmap+scan {payload['speedup']:.1f}x")
+    return payload
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

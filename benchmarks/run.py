@@ -10,9 +10,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     from benchmarks import (e2lm_scaling, fig7_iterations, kernel_bench,
-                            roofline, table23_notmnist, table45_mnist)
-    for mod in (kernel_bench, e2lm_scaling, table45_mnist, table23_notmnist,
-                fig7_iterations, roofline):
+                            map_phase, roofline, table23_notmnist,
+                            table45_mnist)
+    for mod in (kernel_bench, e2lm_scaling, map_phase, table45_mnist,
+                table23_notmnist, fig7_iterations, roofline):
         try:
             mod.main()
         except Exception as e:  # keep the suite going; report at the end

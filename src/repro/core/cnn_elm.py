@@ -16,6 +16,16 @@ At e=0 (Tables 2/4) no SGD happens at all: one pass accumulates U,V and β
 is solved once — pure CNN-as-random-feature ELM.
 
 Reduce (lines 18-20): average every Wᵢ, bᵢ, βᵢ across the k members.
+
+Two Map-phase implementations:
+
+* ``train_member``          — the faithful sequential reference: a host-side
+  Python batch loop, three jit dispatches per batch per member.
+* ``train_members_stacked`` — the fast path: all k members' params and ELM
+  stats stacked on a leading member dim, the per-batch step ``vmap``-ed over
+  members, and the batch loop rolled into one donated ``lax.scan`` — one
+  device dispatch per epoch instead of 3 × num_batches × k. Numerically
+  equivalent to k calls of ``train_member`` (same init, same batch order).
 """
 from __future__ import annotations
 
@@ -28,9 +38,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import elm
-from repro.core.averaging import average_trees
-from repro.data.partition import Partition, batches
+from repro.core.averaging import (average_member_dim, average_trees,
+                                  broadcast_member_dim,
+                                  weighted_average_trees)
+from repro.data.partition import Partition, batches, stacked_epoch_batches
 from repro.data.synthetic import one_hot
+from repro.distributed import sharding
+from repro.kernels import resolve_use_pallas
 from repro.models import cnn
 
 
@@ -40,17 +54,18 @@ class CNNELMModel:
     beta: jax.Array          # (F, C)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _batch_stats(cfg, cnn_params, x, t):
-    h = cnn.features(cfg, cnn_params, x)
-    return elm.batch_stats(h, t)
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _batch_stats(cfg, cnn_params, x, t, *, use_pallas: Optional[bool] = None):
+    h = cnn.features(cfg, cnn_params, x, use_pallas=use_pallas)
+    return elm.batch_stats(h, t, use_pallas=use_pallas)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _sgd_step(cfg, cnn_params, beta, x, t, lr):
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _sgd_step(cfg, cnn_params, beta, x, t, lr, *,
+              use_pallas: Optional[bool] = None):
     """Line 13-14: one SGD step on the ELM least-squares error."""
     def loss(p):
-        h = cnn.features(cfg, p, x)
+        h = cnn.features(cfg, p, x, use_pallas=use_pallas)
         return elm.elm_loss(h, beta, t)
 
     val, grads = jax.value_and_grad(loss)(cnn_params)
@@ -65,10 +80,12 @@ def _scores(cfg, cnn_params, beta, x):
 
 
 def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
-                 lr_schedule, batch_size: int, seed: int = 0) -> CNNELMModel:
+                 lr_schedule, batch_size: int, seed: int = 0,
+                 use_pallas: Optional[bool] = None) -> CNNELMModel:
     """Algorithm 2 inner loop for one machine. epochs=0 -> ELM-only pass."""
     F = cnn.feature_dim(cfg)
     C = cfg.num_classes
+    use_pallas = resolve_use_pallas(use_pallas)
 
     def one_pass(params, solve_each_batch: bool, lr: Optional[float]):
         stats = elm.zero_stats(F, C)
@@ -76,11 +93,13 @@ def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
         for x, y in batches(part, batch_size, seed=seed):
             t = jnp.asarray(one_hot(y, C))
             xj = jnp.asarray(x)
-            stats = elm.add_stats(stats, _batch_stats(cfg, params, xj, t))
+            stats = elm.add_stats(stats, _batch_stats(cfg, params, xj, t,
+                                                      use_pallas=use_pallas))
             if solve_each_batch:
                 beta = elm.solve_beta(stats, cfg.elm_lambda)
                 params, _ = _sgd_step(cfg, params, beta, xj, t,
-                                      jnp.asarray(lr, jnp.float32))
+                                      jnp.asarray(lr, jnp.float32),
+                                      use_pallas=use_pallas)
         return params, stats
 
     if epochs == 0:
@@ -93,23 +112,151 @@ def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
     return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
 
 
-def average_models(models: Sequence[CNNELMModel]) -> CNNELMModel:
-    """Reduce: lines 18-20 — average CNN weights, biases AND β."""
+@dataclass
+class StackedMembers:
+    """All k members with every array stacked on a leading member dim."""
+    cnn_params: dict         # leaves: (k, ...)
+    beta: jax.Array          # (k, F, C)
+
+    @property
+    def k(self) -> int:
+        return self.beta.shape[0]
+
+    def member(self, i: int) -> CNNELMModel:
+        return CNNELMModel(jax.tree.map(lambda a: a[i], self.cnn_params),
+                           self.beta[i])
+
+    def unstack(self) -> List[CNNELMModel]:
+        return [self.member(i) for i in range(self.k)]
+
+    def averaged(self) -> CNNELMModel:
+        """Reduce: the mean over the member dim (one all-reduce when the
+        member dim is sharded across pods)."""
+        avg_cnn, avg_beta = average_member_dim((self.cnn_params, self.beta))
+        return CNNELMModel(avg_cnn, avg_beta)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "solve_each_batch", "use_pallas"),
+                   donate_argnames=("params_k", "stats_k"))
+def _stacked_epoch(cfg, params_k, stats_k, xb, tb, lr, *,
+                   solve_each_batch: bool, use_pallas: bool):
+    """One epoch for ALL members in ONE device dispatch.
+
+    xb: (nb, k, B, H, W[, C]) batches, tb: (nb, k, B, C) one-hot targets —
+    scan over nb, vmap over k. The carry (params, stats) is donated so each
+    epoch updates buffers in place. Per batch and member this replays
+    Algorithm 2 lines 9-14 exactly: accumulate stats, solve β from the
+    running sums (one Cholesky factor, reused for the solve), SGD on the ELM
+    least-squares error."""
+    def member_step(params, stats, x, t):
+        h = cnn.features(cfg, params, x, use_pallas=use_pallas)
+        stats = elm.add_stats(stats,
+                              elm.batch_stats(h, t, use_pallas=use_pallas))
+        if solve_each_batch:
+            beta = elm.solve_beta(stats, cfg.elm_lambda)
+
+            def loss(p):
+                hp = cnn.features(cfg, p, x, use_pallas=use_pallas)
+                return elm.elm_loss(hp, beta, t)
+
+            grads = jax.grad(loss)(params)
+            params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, stats
+
+    def body(carry, batch):
+        p, s = carry
+        x, t = batch
+        return jax.vmap(member_step)(p, s, x, t), None
+
+    (params_k, stats_k), _ = jax.lax.scan(body, (params_k, stats_k), (xb, tb))
+    return params_k, stats_k
+
+
+def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
+                          *, epochs: int, lr_schedule, batch_size: int,
+                          seed_base: int = 1000,
+                          use_pallas: Optional[bool] = None,
+                          mesh=None) -> StackedMembers:
+    """Algorithm 2 Map phase, vectorised: k members trained as one stacked
+    program. Matches ``train_member(..., seed=seed_base + i)`` per member
+    (same init, same batch order, same update sequence). ``mesh`` optionally
+    places the member dim on the 'pod' mesh axis (see
+    ``sharding.member_dim_shardings``); the scan then runs SPMD across pods."""
+    k = len(partitions)
+    F, C = cnn.feature_dim(cfg), cfg.num_classes
+    use_pallas = resolve_use_pallas(use_pallas)
+
+    xs, ys = stacked_epoch_batches(partitions, batch_size,
+                                   [seed_base + i for i in range(k)])
+    # member-major (k, nb, ...) -> scan-major (nb, k, ...)
+    xb = jnp.asarray(np.swapaxes(xs, 0, 1))
+    tb = jnp.asarray(np.swapaxes(
+        one_hot(ys.reshape(-1), C).reshape(*ys.shape, C), 0, 1))
+
+    params_k = broadcast_member_dim(init_params, k)
+    if mesh is not None:
+        params_k = jax.device_put(
+            params_k, sharding.member_dim_shardings(params_k, mesh))
+
+    passes = [(False, 0.0)] if epochs == 0 else [
+        (True, float(lr_schedule(e))) for e in range(epochs)]
+    stats_k = None
+    for solve_each_batch, lr in passes:
+        stats_k = elm.zero_stats_stacked(k, F, C)
+        if mesh is not None:
+            stats_k = jax.device_put(
+                stats_k, sharding.member_dim_shardings(stats_k, mesh))
+        params_k, stats_k = _stacked_epoch(
+            cfg, params_k, stats_k, xb, tb, jnp.asarray(lr, jnp.float32),
+            solve_each_batch=solve_each_batch, use_pallas=use_pallas)
+    return StackedMembers(params_k, elm.solve_beta(stats_k, cfg.elm_lambda))
+
+
+def average_models(models: Sequence[CNNELMModel],
+                   weights: Optional[Sequence[float]] = None) -> CNNELMModel:
+    """Reduce: lines 18-20 — average CNN weights, biases AND β. Optional
+    ``weights`` (e.g. shard sizes) give the exact expectation over unequal
+    partitions — the paper's 'training data distribution needs to be
+    carefully selected' drawback."""
+    if weights is not None:
+        if len(weights) != len(models):
+            raise ValueError(f"{len(weights)} weights for {len(models)} models")
+        avg = weighted_average_trees(
+            [(m.cnn_params, m.beta) for m in models], weights)
+        return CNNELMModel(*avg)
     avg_cnn = average_trees([m.cnn_params for m in models])
     avg_beta = average_trees([m.beta for m in models])
     return CNNELMModel(avg_cnn, avg_beta)
 
 
 def distributed_cnn_elm(cfg, partitions: List[Partition], key, *,
-                        epochs: int, lr_schedule, batch_size: int):
+                        epochs: int, lr_schedule, batch_size: int,
+                        stacked: bool = False,
+                        use_pallas: Optional[bool] = None,
+                        mesh=None, weight_by_shard: bool = False):
     """Full Algorithm 2: same init for all machines (line 3), independent
-    training (Map), weight averaging (Reduce). Returns (members, averaged)."""
+    training (Map), weight averaging (Reduce). Returns (members, averaged).
+
+    ``stacked=True`` runs the vmap+scan fast path (equal batch counts per
+    shard required — floor(len/batch_size) must match, see
+    ``stacked_epoch_batches``); ``weight_by_shard=True`` weights the Reduce
+    by shard size for unequal partitions on either path."""
     init = cnn.init_params(cfg, key)
+    weights = [len(p.x) for p in partitions] if weight_by_shard else None
+    if stacked:
+        sm = train_members_stacked(cfg, init, partitions, epochs=epochs,
+                                   lr_schedule=lr_schedule,
+                                   batch_size=batch_size,
+                                   use_pallas=use_pallas, mesh=mesh)
+        members = sm.unstack()
+        return members, (average_models(members, weights=weights)
+                         if weights is not None else sm.averaged())
     members = [train_member(cfg, init, part, epochs=epochs,
                             lr_schedule=lr_schedule, batch_size=batch_size,
-                            seed=1000 + i)
+                            seed=1000 + i, use_pallas=use_pallas)
                for i, part in enumerate(partitions)]
-    return members, average_models(members)
+    return members, average_models(members, weights=weights)
 
 
 def evaluate(cfg, model: CNNELMModel, x: np.ndarray, y: np.ndarray,

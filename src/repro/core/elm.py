@@ -11,7 +11,7 @@ decomposable over data shards — the E²LM MapReduce (repro.core.e2lm).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +33,16 @@ def zero_stats(num_features: int, num_classes: int) -> ELMStats:
                     jnp.zeros((), jnp.float32))
 
 
+def zero_stats_stacked(k: int, num_features: int, num_classes: int) -> ELMStats:
+    """Zero stats for k members stacked on a leading dim."""
+    return ELMStats(
+        jnp.zeros((k, num_features, num_features), jnp.float32),
+        jnp.zeros((k, num_features, num_classes), jnp.float32),
+        jnp.zeros((k,), jnp.float32))
+
+
 def batch_stats(h, t, *, activation: bool = True,
-                use_pallas: bool = False) -> ELMStats:
+                use_pallas: Optional[bool] = None) -> ELMStats:
     """Map step: stats of one batch. h: (n, L) raw features, t: (n, C)."""
     if activation:
         h = optimal_tanh(h)
@@ -46,12 +54,33 @@ def add_stats(a: ELMStats, b: ELMStats) -> ELMStats:
     return ELMStats(a.u + b.u, a.v + b.v, a.n + b.n)
 
 
+def _cho_solve_beta(u, v, lam: float) -> jax.Array:
+    """β = (I/λ + U)⁻¹ V: one Cholesky factorisation, reused for both
+    triangular solves. Accepts unbatched (L, L)/(L, C) or member-stacked
+    (k, L, L)/(k, L, C) operands.
+
+    The solve always runs through the BATCHED lowering (a unit batch dim is
+    added when unbatched): XLA's batched triangular solve differs from the
+    unbatched LAPACK path by O(eps) per solve, which compounds over
+    per-batch SGD steps — one shared lowering keeps the sequential reference
+    and the vmapped stacked Map phase numerically identical."""
+    L = u.shape[-1]
+    a = u + jnp.eye(L, dtype=jnp.float32) / lam
+    batched = a.ndim == 3
+    if not batched:
+        a, v = a[None], v[None]
+    f = jax.lax.linalg.cholesky(a)
+    y = jax.lax.linalg.triangular_solve(f, v, left_side=True, lower=True)
+    b = jax.lax.linalg.triangular_solve(f, y, left_side=True, lower=True,
+                                        transpose_a=True)
+    return b if batched else b[0]
+
+
 def solve_beta(stats: ELMStats, lam: float) -> jax.Array:
-    """Reduce step, Eq. 5: β = (I/λ + U)⁻¹ V via Cholesky (SPD for λ>0)."""
-    L = stats.u.shape[0]
-    a = stats.u + jnp.eye(L, dtype=jnp.float32) / lam
-    cho = jax.scipy.linalg.cho_factor(a)
-    return jax.scipy.linalg.cho_solve(cho, stats.v)
+    """Reduce step, Eq. 5: β = (I/λ + U)⁻¹ V via Cholesky (SPD for λ>0).
+    Accepts member-stacked stats (u (k, L, L), v (k, L, C) -> β (k, L, C)):
+    one batched Cholesky dispatch for all members instead of k round-trips."""
+    return _cho_solve_beta(stats.u, stats.v, lam)
 
 
 def elm_loss(h, beta, t, *, activation: bool = True):

@@ -4,11 +4,16 @@
                         distribution (the extended-MNIST regime, Table 4/5).
 ``partition_by_class``— contiguous/class-sorted split: machines see skewed
                         distributions (the not-MNIST regime, Table 2/3).
+
+``batches`` is the streaming iterator (host loop, the faithful path);
+``epoch_batch_arrays``/``stacked_epoch_batches`` materialise the SAME batch
+order as fixed-shape arrays so the whole epoch can ride one ``lax.scan`` —
+the stacked Map-phase contract (see docs/perf.md).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -50,3 +55,38 @@ def batches(part: Partition, batch_size: int, seed: int = 0, epochs: int = 1):
         for i in range(0, n, batch_size):
             j = idx[i:i + batch_size]
             yield part.x[j], part.y[j]
+
+
+def epoch_batch_arrays(part: Partition, batch_size: int,
+                       seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """One epoch of ``batches(part, batch_size, seed)`` as fixed-shape arrays:
+    x (nb, B, ...) and y (nb, B). Bit-identical batch order to the iterator
+    (same rng stream, same floor(n/B)*B truncation), so the scan-based fast
+    path consumes exactly the data the sequential reference would."""
+    rng = np.random.default_rng(seed)
+    n = (len(part.x) // batch_size) * batch_size
+    if n == 0:
+        raise ValueError(
+            f"partition of {len(part.x)} rows yields no batch of {batch_size}")
+    idx = rng.permutation(len(part.x))[:n]
+    nb = n // batch_size
+    x = part.x[idx].reshape(nb, batch_size, *part.x.shape[1:])
+    y = part.y[idx].reshape(nb, batch_size)
+    return x, y
+
+
+def stacked_epoch_batches(partitions: Sequence[Partition], batch_size: int,
+                          seeds: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """All k members' epoch batches stacked member-major: x (k, nb, B, ...)
+    and y (k, nb, B). Requires every partition to yield the same batch count
+    (the paper's P = floor(m/k) split guarantees it); unequal shards must use
+    the sequential path (or re-partition)."""
+    per = [epoch_batch_arrays(p, batch_size, seed=s)
+           for p, s in zip(partitions, seeds)]
+    counts = {x.shape[0] for x, _ in per}
+    if len(counts) != 1:
+        raise ValueError(
+            f"stacked Map phase needs equal batch counts per member, got "
+            f"{sorted(x.shape[0] for x, _ in per)}; use the sequential path "
+            f"for unequal shards")
+    return (np.stack([x for x, _ in per]), np.stack([y for _, y in per]))

@@ -94,6 +94,19 @@ def _is_logical_leaf(x):
     return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
 
 
+def member_dim_shardings(tree, mesh: Mesh, rules=None):
+    """NamedSharding pytree for member-stacked arrays (leading dim = the
+    'member' logical axis, everything else replicated). This is the placement
+    contract of the stacked Map phase: each pod holds k/|pod| members and the
+    Reduce mean lowers to one all-reduce across pods. Falls back to full
+    replication when 'member' resolves to no mesh axis (e.g. k not divisible
+    by the pod count, or a mesh without a 'pod' axis)."""
+    def one(a):
+        logical = ("member",) + (None,) * (a.ndim - 1)
+        return NamedSharding(mesh, resolve_spec(a.shape, logical, mesh, rules))
+    return jax.tree.map(one, tree)
+
+
 def constrain(x, logical, mesh: Mesh, rules=None):
     """In-function sharding constraint from a logical spec."""
     spec = resolve_spec(x.shape, logical, mesh, rules)

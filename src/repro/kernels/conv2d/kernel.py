@@ -12,11 +12,14 @@ well); the kernel itself is the blocked GEMM, grid (M/bm, N/bn, K/bk).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
 
 # MXU-aligned default tiles (multiples of 128 where the operand allows)
 BM, BN, BK = 128, 128, 128
@@ -38,9 +41,7 @@ def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def blocked_matmul(x, w, *, bm: int = BM, bn: int = BN, bk: int = BK,
-                   interpret: bool = True):
-    """(M,K) @ (K,N) -> (M,N), f32 accumulation. Pads to tile multiples."""
+def _blocked_matmul(x, w, *, bm: int, bn: int, bk: int, interpret: bool):
     M, K = x.shape
     K2, N = w.shape
     assert K == K2
@@ -62,3 +63,14 @@ def blocked_matmul(x, w, *, bm: int = BM, bn: int = BN, bk: int = BK,
         interpret=interpret,
     )(xp, wp)
     return out[:M, :N]
+
+
+def blocked_matmul(x, w, *, bm: int = BM, bn: int = BN, bk: int = BK,
+                   interpret: Optional[bool] = None):
+    """(M,K) @ (K,N) -> (M,N), f32 accumulation. Pads to tile multiples.
+
+    ``interpret=None`` derives the mode from the backend: compiled on TPU,
+    interpreter elsewhere (``repro.kernels.resolve_interpret``). Resolved
+    outside the jit so the resolved bool is the static cache key."""
+    return _blocked_matmul(x, w, bm=bm, bn=bn, bk=bk,
+                           interpret=resolve_interpret(interpret))

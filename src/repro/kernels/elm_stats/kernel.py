@@ -15,11 +15,14 @@ runs in the j==0 lane so every (i,k) pair touches it exactly once.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
 
 BL, BN = 128, 512  # L-tile and n(row)-tile
 
@@ -56,8 +59,7 @@ def _elm_stats_kernel(h_i_ref, h_j_ref, t_ref, u_ref, v_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("bl", "bn", "interpret"))
-def elm_stats(h, t, *, bl: int = BL, bn: int = BN, interpret: bool = True):
-    """h: (n, L), t: (n, C) -> (U (L,L) f32, V (L,C) f32)."""
+def _elm_stats(h, t, *, bl: int, bn: int, interpret: bool):
     n, L = h.shape
     n2, C = t.shape
     assert n == n2
@@ -89,3 +91,13 @@ def elm_stats(h, t, *, bl: int = BL, bn: int = BN, interpret: bool = True):
         interpret=interpret,
     )(hp, hp, tp)
     return u[:L, :L], v[:L, :C]
+
+
+def elm_stats(h, t, *, bl: int = BL, bn: int = BN,
+              interpret: Optional[bool] = None):
+    """h: (n, L), t: (n, C) -> (U (L,L) f32, V (L,C) f32).
+
+    ``interpret=None`` = auto: compiled on TPU, interpreter elsewhere.
+    Resolved outside the jit so the resolved bool is the static cache key."""
+    return _elm_stats(h, t, bl=bl, bn=bn,
+                      interpret=resolve_interpret(interpret))

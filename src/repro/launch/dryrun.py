@@ -172,6 +172,8 @@ def build_lowered(cfg, shape, mesh, *, multi_pod: bool,
 
 def _cost_of(compiled):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jaxlib: list of per-device dicts
+        cost = cost[0] if cost else {}
     coll = hlo_analysis.collective_stats(compiled.as_text())
     return {"flops_pd": float(cost.get("flops", 0.0)),
             "bytes_pd": float(cost.get("bytes accessed", 0.0)),

@@ -7,9 +7,12 @@ per stage. The flattened last pooled map is the ELM hidden matrix H
 ``repro.core.elm``, not here.
 
 Convolution runs through ``repro.kernels.conv2d.ops`` which dispatches to
-the Pallas TPU kernel on TPU and to ``jax.lax.conv`` on CPU.
+the Pallas TPU kernel on TPU and to ``jax.lax.conv`` on CPU
+(``use_pallas=None`` = that auto policy; a bool forces the path).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +55,7 @@ def _mean_pool(x, s):
     return jnp.mean(x, axis=(2, 4))
 
 
-def features(cfg, params, images, *, use_pallas: bool = False):
+def features(cfg, params, images, *, use_pallas: Optional[bool] = None):
     """images: (B, H, W) or (B, H, W, C) in [0,1]. Returns flat H (B, F)."""
     x = images if images.ndim == 4 else images[..., None]
     x = x.astype(jnp.float32)

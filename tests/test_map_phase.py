@@ -1,0 +1,182 @@
+"""Stacked (vmap + lax.scan) Map phase vs the sequential Algorithm 2
+reference: numerical equivalence, the scan batching contract, the weighted
+Reduce, and the map-phase benchmark smoke run."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_reduced_config, replace
+from repro.core import cnn_elm
+from repro.core.averaging import weighted_average_trees
+from repro.data.partition import (Partition, batches, epoch_batch_arrays,
+                                  partition_iid, stacked_epoch_batches)
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+CFG = get_reduced_config("cnn_elm_6c12c")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    ds = make_extended_mnist(n_per_class=20, seed=0)
+    return partition_iid(ds.x, ds.y, k=3, seed=0)
+
+
+def _assert_models_close(a, b, rtol, atol_beta, atol_params):
+    np.testing.assert_allclose(np.asarray(a.beta), np.asarray(b.beta),
+                               rtol=rtol, atol=atol_beta)
+    for la, lb in zip(jax.tree.leaves(a.cnn_params),
+                      jax.tree.leaves(b.cnn_params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=rtol, atol=atol_params)
+
+
+def test_epoch_batch_arrays_match_iterator(parts):
+    """The fixed-shape epoch arrays must replay the streaming iterator's
+    batch order bit-for-bit — the contract the scan path relies on."""
+    part = parts[0]
+    xs, ys = epoch_batch_arrays(part, 32, seed=7)
+    for i, (x, y) in enumerate(batches(part, 32, seed=7)):
+        np.testing.assert_array_equal(xs[i], x)
+        np.testing.assert_array_equal(ys[i], y)
+    assert xs.shape[0] == i + 1
+
+
+def test_stacked_epoch_batches_rejects_unequal():
+    x = np.zeros((100, 4, 4), np.float32)
+    y = np.zeros((100,), np.int32)
+    uneven = [Partition(x[:64], y[:64]), Partition(x[:32], y[:32])]
+    with pytest.raises(ValueError, match="equal batch counts"):
+        stacked_epoch_batches(uneven, 32, [0, 1])
+
+
+def test_stacked_equivalent_elm_only(parts):
+    """epochs=0 (Tables 2/4): the stacked path must reproduce the sequential
+    members and averaged model exactly (stats are pure sums; the β solve
+    shares one lowering across both paths)."""
+    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
+        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=32)
+    m_st, avg_st = cnn_elm.distributed_cnn_elm(
+        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=32,
+        stacked=True)
+    for a, b in zip(m_seq, m_st):
+        _assert_models_close(a, b, rtol=0, atol_beta=0, atol_params=0)
+    _assert_models_close(avg_seq, avg_st, rtol=1e-6, atol_beta=1e-6,
+                         atol_params=1e-6)
+
+
+def test_stacked_equivalent_sgd_epochs(parts):
+    """epochs=2: member params and β within rtol 1e-4 of the sequential
+    reference. λ=1 keeps the solve well-conditioned so the comparison
+    measures implementation equivalence, not f32 amplification through a
+    nearly-singular normal matrix."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
+        cfg, parts, KEY, epochs=2, lr_schedule=lr, batch_size=32)
+    m_st, avg_st = cnn_elm.distributed_cnn_elm(
+        cfg, parts, KEY, epochs=2, lr_schedule=lr, batch_size=32,
+        stacked=True)
+    for a, b in zip(m_seq + [avg_seq], m_st + [avg_st]):
+        _assert_models_close(a, b, rtol=1e-4, atol_beta=2e-5,
+                             atol_params=1e-6)
+
+
+def test_stacked_members_api(parts):
+    sm = cnn_elm.train_members_stacked(CFG, cnn.init_params(CFG, KEY), parts,
+                                       epochs=0, lr_schedule=None,
+                                       batch_size=32)
+    assert sm.k == len(parts)
+    members = sm.unstack()
+    assert len(members) == sm.k
+    np.testing.assert_array_equal(np.asarray(members[1].beta),
+                                  np.asarray(sm.beta[1]))
+    avg = sm.averaged()
+    np.testing.assert_allclose(
+        np.asarray(avg.beta),
+        np.mean([np.asarray(m.beta) for m in members], axis=0),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_stacked_with_mesh(parts):
+    """member_dim_shardings placement keeps the stacked path equivalent on a
+    1-device 'pod' mesh (degenerate but exercises the SPMD plumbing)."""
+    mesh = jax.make_mesh((1,), ("pod",))
+    init = cnn.init_params(CFG, KEY)
+    plain = cnn_elm.train_members_stacked(CFG, init, parts, epochs=0,
+                                          lr_schedule=None, batch_size=32)
+    meshed = cnn_elm.train_members_stacked(CFG, init, parts, epochs=0,
+                                           lr_schedule=None, batch_size=32,
+                                           mesh=mesh)
+    np.testing.assert_allclose(np.asarray(plain.beta),
+                               np.asarray(meshed.beta), rtol=1e-6, atol=1e-6)
+
+
+def test_average_models_weighted(parts):
+    """Shard-size weights reduce unequal partitions to the exact weighted
+    expectation (delegates to weighted_average_trees)."""
+    init = cnn.init_params(CFG, KEY)
+    models = [cnn_elm.train_member(CFG, init, p, epochs=0, lr_schedule=None,
+                                   batch_size=32, seed=1000 + i)
+              for i, p in enumerate(parts[:2])]
+    w = [3.0, 1.0]
+    avg = cnn_elm.average_models(models, weights=w)
+    ref_cnn, ref_beta = weighted_average_trees(
+        [(m.cnn_params, m.beta) for m in models], w)
+    np.testing.assert_allclose(np.asarray(avg.beta), np.asarray(ref_beta),
+                               rtol=1e-6)
+    for la, lb in zip(jax.tree.leaves(avg.cnn_params),
+                      jax.tree.leaves(ref_cnn)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-6)
+    with pytest.raises(ValueError):
+        cnn_elm.average_models(models, weights=[1.0])
+
+
+def test_weight_by_shard_on_stacked_path():
+    """stacked=True must honour weight_by_shard (regression: it was silently
+    ignored): shards of 40/33 rows both give 2 batches of 16, so the stacked
+    path accepts them, and the Reduce must weight by shard size."""
+    ds = make_extended_mnist(n_per_class=10, seed=4)
+    parts = [Partition(ds.x[:40], ds.y[:40]), Partition(ds.x[40:73], ds.y[40:73])]
+    members, avg = cnn_elm.distributed_cnn_elm(
+        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=16,
+        stacked=True, weight_by_shard=True)
+    ref = cnn_elm.average_models(members, weights=[40.0, 33.0])
+    np.testing.assert_allclose(np.asarray(avg.beta), np.asarray(ref.beta),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_backend_env_override_applies_per_call(monkeypatch):
+    """REPRO_USE_PALLAS resolves outside the jit cache (regression: the
+    unresolved None used to be the static key, so the first call's auto
+    decision was replayed forever)."""
+    from repro.kernels.conv2d import ops as conv_ops
+    x = jax.numpy.zeros((1, 8, 8, 1))
+    w = jax.numpy.zeros((3, 3, 1, 2))
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    auto = str(jax.make_jaxpr(lambda: conv_ops.conv2d_valid(x, w))())
+    assert "conv_general_dilated" in auto  # CPU auto -> XLA reference
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    forced = str(jax.make_jaxpr(lambda: conv_ops.conv2d_valid(x, w))())
+    assert "conv_general_dilated" not in forced  # im2col + Pallas GEMM
+
+
+def test_map_phase_benchmark_smoke(tmp_path):
+    """The benchmark must run end-to-end on a tiny config and emit a
+    well-formed BENCH_map_phase.json."""
+    from benchmarks import map_phase
+    payload = map_phase.run(k=2, n_per_class=8, epochs=1, batch_size=16,
+                            iters=1, out_dir=str(tmp_path))
+    path = tmp_path / "BENCH_map_phase.json"
+    assert path.exists()
+    on_disk = json.loads(path.read_text())
+    for key in ("sequential_us", "stacked_us", "speedup", "k", "epochs",
+                "num_batches", "batch_size", "backend"):
+        assert key in on_disk, key
+    assert on_disk["sequential_us"] > 0 and on_disk["stacked_us"] > 0
+    assert payload["speedup"] == pytest.approx(
+        payload["sequential_us"] / payload["stacked_us"])
