@@ -1,5 +1,5 @@
 """Map-phase wall-clock: sequential ``train_member`` loop vs the stacked
-vmap + lax.scan fast path (one device dispatch per epoch).
+vmap + lax.scan fast path (one device dispatch per epoch chunk).
 
 The sequential reference dispatches 3 jit calls per batch per member from
 the host (feature/stats, β solve, SGD step); the stacked path trains all k
@@ -7,38 +7,49 @@ members in one donated scan. The ratio is the host-dispatch overhead the
 paper's "embarrassingly parallel Map" leaves on the table when driven batch
 by batch from Python.
 
-Emits ``experiments/BENCH_map_phase.json``:
+Three configs, three JSONs under ``experiments/``:
 
-  sequential_us / stacked_us — mean wall-clock per full training run (µs)
-  speedup                    — sequential_us / stacked_us
-  k, epochs, num_batches, batch_size, feature_dim, backend — the workload
+* ``run``         → ``BENCH_map_phase.json`` — the equal-shard k=4 case
+  (sequential vs stacked; the PR-1 headline number, kept as the regression
+  floor).
+* ``run_unequal`` → ``BENCH_map_phase_unequal.json`` — shards in a
+  1:2:…:k size ratio; sequential + shard-weighted Reduce vs the
+  padded/masked stacked path (the regime that used to hard-fail).
+* ``run_chunked`` → ``BENCH_map_phase_chunked.json`` — the monolithic
+  one-scan epoch vs the double-buffered chunked scan, plus the device-bytes
+  bound the chunking buys and a bit-identical β check.
 
-Run standalone: ``PYTHONPATH=src python -m benchmarks.map_phase`` (or via
-``benchmarks/run.py``).
+Run standalone: ``PYTHONPATH=src python -m benchmarks.map_phase``
+(``--smoke`` for the tiny CI config; or via ``benchmarks/run.py``).
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
+
+import jax
 
 from benchmarks.common import emit, save_result, time_call
 from repro.configs.base import get_reduced_config
 from repro.core import cnn_elm
-from repro.data.partition import partition_iid
+from repro.data.partition import partition_iid, partition_unequal
 from repro.data.synthetic import make_extended_mnist
 from repro.models import cnn
 from repro.optim.schedules import dynamic_paper
 
 
-def run(k: int = 4, n_per_class: int = 40, epochs: int = 2,
-        batch_size: int = 32, iters: int = 3, out_dir: str = None):
-    """Time both Map-phase implementations on one synthetic workload and
-    persist the comparison. Returns the payload dict."""
+def _workload(n_per_class: int):
     cfg = get_reduced_config("cnn_elm_6c12c")
     ds = make_extended_mnist(n_per_class=n_per_class, seed=0)
-    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
     init = cnn.init_params(cfg, jax.random.PRNGKey(0))
-    lr = dynamic_paper(0.05)
+    return cfg, ds, init, dynamic_paper(0.05)
+
+
+def run(k: int = 4, n_per_class: int = 40, epochs: int = 2,
+        batch_size: int = 32, iters: int = 3, out_dir: str = None):
+    """Time both Map-phase implementations on one equal-shard workload and
+    persist the comparison. Returns the payload dict."""
+    cfg, ds, init, lr = _workload(n_per_class)
+    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
 
     def sequential():
         members = [cnn_elm.train_member(cfg, init, p, epochs=epochs,
@@ -75,9 +86,135 @@ def run(k: int = 4, n_per_class: int = 40, epochs: int = 2,
     return payload
 
 
-def main():
-    run()
+def run_unequal(k: int = 4, n_per_class: int = 40, epochs: int = 2,
+                batch_size: int = 32, iters: int = 3, out_dir: str = None):
+    """Unequal shards (sizes 1:2:…:k): sequential members + shard-weighted
+    Reduce vs the padded/masked stacked path. Before this path existed the
+    stacked Map phase raised on these shards and everything fell back to the
+    sequential loop — ``speedup`` is what the masked scan claws back."""
+    cfg, ds, init, lr = _workload(n_per_class)
+    base = len(ds.x) // (k * (k + 1) // 2)
+    sizes = [base * (i + 1) for i in range(k)]
+    parts = partition_unequal(ds.x, ds.y, sizes, seed=0)
+    weights = [float(s) for s in sizes]
+
+    def sequential():
+        members = [cnn_elm.train_member(cfg, init, p, epochs=epochs,
+                                        lr_schedule=lr,
+                                        batch_size=batch_size, seed=1000 + i)
+                   for i, p in enumerate(parts)]
+        return cnn_elm.average_models(members, weights=weights).beta
+
+    def stacked():
+        sm = cnn_elm.train_members_stacked(cfg, init, parts, epochs=epochs,
+                                           lr_schedule=lr,
+                                           batch_size=batch_size)
+        return cnn_elm.average_models(sm.unstack(), weights=weights).beta
+
+    seq_us = time_call(sequential, warmup=1, iters=iters)
+    st_us = time_call(stacked, warmup=1, iters=iters)
+
+    batch_counts = [len(p.x) // batch_size for p in parts]
+    payload = {
+        "sequential_us": seq_us,
+        "stacked_us": st_us,
+        "speedup": seq_us / st_us,
+        "k": k,
+        "epochs": epochs,
+        "shard_sizes": sizes,
+        "batch_counts": batch_counts,
+        "padded_batches": max(batch_counts),
+        "pad_fraction": 1.0 - sum(batch_counts) / (k * max(batch_counts)),
+        "batch_size": batch_size,
+        "feature_dim": cnn.feature_dim(cfg),
+        "backend": jax.default_backend(),
+    }
+    save_result("BENCH_map_phase_unequal", payload, out_dir=out_dir)
+    emit(f"map_phase_unequal_seq_k{k}_e{epochs}", seq_us,
+         f"shards {batch_counts}")
+    emit(f"map_phase_unequal_stacked_k{k}_e{epochs}", st_us,
+         f"masked scan {payload['speedup']:.1f}x")
+    return payload
+
+
+def run_chunked(k: int = 4, n_per_class: int = 40, epochs: int = 2,
+                batch_size: int = 32, chunk_batches: int = 2,
+                iters: int = 3, out_dir: str = None):
+    """Monolithic whole-epoch scan vs the double-buffered chunked scan.
+    The chunked path bounds peak device batch memory to TWO chunks — the
+    one scanning plus the one in flight (``peak_bytes`` vs
+    ``epoch_bytes``) — at the cost of one dispatch per chunk; the two must
+    be bit-identical (asserted here, not just tested)."""
+    cfg, ds, init, lr = _workload(n_per_class)
+    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
+    nb = len(parts[0].x) // batch_size
+    if not 0 < chunk_batches < nb:
+        raise ValueError(
+            f"chunk_batches={chunk_batches} would not chunk a {nb}-batch "
+            f"epoch — the 'chunked' timing would silently measure the "
+            f"monolithic path")
+    last = {}  # beta from the most recent timed run (deterministic per path)
+
+    def monolithic():
+        last["mono"] = cnn_elm.train_members_stacked(
+            cfg, init, parts, epochs=epochs, lr_schedule=lr,
+            batch_size=batch_size).beta
+        return last["mono"]
+
+    def chunked():
+        last["chunked"] = cnn_elm.train_members_stacked(
+            cfg, init, parts, epochs=epochs, lr_schedule=lr,
+            batch_size=batch_size, chunk_batches=chunk_batches).beta
+        return last["chunked"]
+
+    mono_us = time_call(monolithic, warmup=1, iters=iters)
+    chk_us = time_call(chunked, warmup=1, iters=iters)
+    identical = bool(np.array_equal(np.asarray(last["mono"]),
+                                    np.asarray(last["chunked"])))
+
+    row = int(np.prod(ds.x.shape[1:])) * 4 + cfg.num_classes * 4 + 4
+    payload = {
+        "monolithic_us": mono_us,
+        "chunked_us": chk_us,
+        "overhead": chk_us / mono_us,
+        "bit_identical": identical,
+        "k": k,
+        "epochs": epochs,
+        "num_batches": nb,
+        "chunk_batches": chunk_batches,
+        "epoch_bytes": nb * k * batch_size * row,
+        "chunk_bytes": chunk_batches * k * batch_size * row,
+        "peak_bytes": 2 * chunk_batches * k * batch_size * row,
+        "batch_size": batch_size,
+        "backend": jax.default_backend(),
+    }
+    save_result("BENCH_map_phase_chunked", payload, out_dir=out_dir)
+    emit(f"map_phase_mono_k{k}_e{epochs}", mono_us, f"{nb} batches resident")
+    emit(f"map_phase_chunked_k{k}_e{epochs}", chk_us,
+         f"chunk={chunk_batches} {payload['overhead']:.2f}x "
+         f"bit_identical={identical}")
+    if not identical:
+        raise AssertionError("chunked scan diverged from monolithic scan")
+    return payload
+
+
+def main(smoke: bool = False):
+    kw = {}
+    if smoke:
+        # smoke results go to a throwaway dir so the tracked full-config
+        # artifacts under experiments/ are never overwritten by a CI tier
+        import tempfile
+        kw = dict(k=2, n_per_class=8, epochs=1, batch_size=16, iters=1,
+                  out_dir=tempfile.mkdtemp(prefix="bench_map_phase_smoke_"))
+        print(f"# smoke JSONs -> {kw['out_dir']}", flush=True)
+    run(**kw)
+    run_unequal(**kw)
+    run_chunked(chunk_batches=2, **kw)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (k=2, 1 epoch, 1 iter)")
+    main(smoke=ap.parse_args().smoke)

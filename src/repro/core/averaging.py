@@ -18,11 +18,16 @@ import jax.numpy as jnp
 
 
 def average_trees(members: Sequence):
+    """Uniform mean, accumulated in f32 regardless of leaf dtype: a bf16
+    running sum rounds every add (≈7 mantissa bits), which for k members
+    drifts O(k·2⁻⁸) off the true mean — the f32 accumulator keeps the
+    uniform path consistent with ``weighted_average_trees``'s
+    scale-in-f32."""
     k = float(len(members))
-    out = members[0]
+    out = jax.tree.map(lambda a: a.astype(jnp.float32), members[0])
     for m in members[1:]:
-        out = jax.tree.map(lambda a, b: a + b.astype(a.dtype), out, m)
-    return jax.tree.map(lambda a: (a.astype(jnp.float32) / k).astype(a.dtype), out)
+        out = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), out, m)
+    return jax.tree.map(lambda a, r: (a / k).astype(r.dtype), out, members[0])
 
 
 def weighted_average_trees(members: Sequence, weights: Sequence[float]):

@@ -23,9 +23,23 @@ Two Map-phase implementations:
   Python batch loop, three jit dispatches per batch per member.
 * ``train_members_stacked`` — the fast path: all k members' params and ELM
   stats stacked on a leading member dim, the per-batch step ``vmap``-ed over
-  members, and the batch loop rolled into one donated ``lax.scan`` — one
-  device dispatch per epoch instead of 3 × num_batches × k. Numerically
-  equivalent to k calls of ``train_member`` (same init, same batch order).
+  members, and the batch loop rolled into one donated ``lax.scan`` per
+  host→device chunk. Numerically equivalent to k calls of ``train_member``
+  (same init, same batch order per epoch).
+
+Unequal partitions ride the stacked path through padding + a per-batch
+validity mask: every member's epoch is padded to the max batch count,
+masked batches contribute zero to the ELM stats (mask-aware
+``elm.batch_stats``) and skip the SGD update, so each member's trajectory
+is bit-identical to its own sequential run. ``chunk_batches`` bounds peak
+device memory: the epoch streams as fixed-size host→device chunks,
+double-buffered (chunk i+1 transfers while chunk i scans), one dispatch
+per chunk.
+
+Both paths reshuffle per epoch from one rng stream per member (epoch e =
+the (e+1)-th permutation of ``default_rng(seed)`` — see
+``data.partition``), replacing the earlier replay-the-same-permutation
+behaviour.
 """
 from __future__ import annotations
 
@@ -41,7 +55,8 @@ from repro.core import elm
 from repro.core.averaging import (average_member_dim, average_trees,
                                   broadcast_member_dim,
                                   weighted_average_trees)
-from repro.data.partition import Partition, batches, stacked_epoch_batches
+from repro.data.partition import (Partition, batches, chunk_scan_major,
+                                  padded_stacked_epoch_batches)
 from repro.data.synthetic import one_hot
 from repro.distributed import sharding
 from repro.kernels import resolve_use_pallas
@@ -73,24 +88,30 @@ def _sgd_step(cfg, cnn_params, beta, x, t, lr, *,
     return new, val
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _scores(cfg, cnn_params, beta, x):
-    h = cnn.features(cfg, cnn_params, x)
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _scores(cfg, cnn_params, beta, x, *, use_pallas: Optional[bool] = None):
+    h = cnn.features(cfg, cnn_params, x, use_pallas=use_pallas)
     return elm.predict(h, beta)
 
 
 def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
                  lr_schedule, batch_size: int, seed: int = 0,
                  use_pallas: Optional[bool] = None) -> CNNELMModel:
-    """Algorithm 2 inner loop for one machine. epochs=0 -> ELM-only pass."""
+    """Algorithm 2 inner loop for one machine. epochs=0 -> ELM-only pass.
+    Epoch e draws the (e+1)-th permutation of ``default_rng(seed)`` — a
+    fresh shuffle every epoch, mirrored exactly by the stacked path."""
     F = cnn.feature_dim(cfg)
     C = cfg.num_classes
     use_pallas = resolve_use_pallas(use_pallas)
 
+    # one live stream for all epochs: each one_pass draws the next
+    # permutation (epoch e = the (e+1)-th draw of default_rng(seed))
+    rng = np.random.default_rng(seed)
+
     def one_pass(params, solve_each_batch: bool, lr: Optional[float]):
         stats = elm.zero_stats(F, C)
         beta = jnp.zeros((F, C), jnp.float32)
-        for x, y in batches(part, batch_size, seed=seed):
+        for x, y in batches(part, batch_size, seed=rng):
             t = jnp.asarray(one_hot(y, C))
             xj = jnp.asarray(x)
             stats = elm.add_stats(stats, _batch_stats(cfg, params, xj, t,
@@ -137,22 +158,28 @@ class StackedMembers:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "solve_each_batch", "use_pallas"),
+                   static_argnames=("cfg", "solve_each_batch", "use_pallas",
+                                    "masked"),
                    donate_argnames=("params_k", "stats_k"))
-def _stacked_epoch(cfg, params_k, stats_k, xb, tb, lr, *,
-                   solve_each_batch: bool, use_pallas: bool):
-    """One epoch for ALL members in ONE device dispatch.
+def _stacked_epoch(cfg, params_k, stats_k, xb, tb, mb, lr, *,
+                   solve_each_batch: bool, use_pallas: bool, masked: bool):
+    """One epoch chunk for ALL members in ONE device dispatch.
 
-    xb: (nb, k, B, H, W[, C]) batches, tb: (nb, k, B, C) one-hot targets —
-    scan over nb, vmap over k. The carry (params, stats) is donated so each
-    epoch updates buffers in place. Per batch and member this replays
-    Algorithm 2 lines 9-14 exactly: accumulate stats, solve β from the
-    running sums (one Cholesky factor, reused for the solve), SGD on the ELM
-    least-squares error."""
-    def member_step(params, stats, x, t):
+    xb: (nb, k, B, H, W[, C]) batches, tb: (nb, k, B, C) one-hot targets,
+    mb: (nb, k) per-batch validity (1 = real, 0 = padding) — scan over nb,
+    vmap over k. The carry (params, stats) is donated so each chunk updates
+    buffers in place. Per batch and member this replays Algorithm 2
+    lines 9-14 exactly: accumulate stats, solve β from the running sums (one
+    Cholesky factor, reused for the solve), SGD on the ELM least-squares
+    error. With ``masked`` (static) a zero-mask batch contributes nothing to
+    U/V/n and leaves the params untouched, so members with fewer real
+    batches coast through their padding bit-identically; ``masked=False``
+    (all shards equal, no chunk padding) keeps the mask out of the compute
+    graph entirely."""
+    def member_step(params, stats, x, t, m):
         h = cnn.features(cfg, params, x, use_pallas=use_pallas)
-        stats = elm.add_stats(stats,
-                              elm.batch_stats(h, t, use_pallas=use_pallas))
+        stats = elm.add_stats(stats, elm.batch_stats(
+            h, t, mask=(m if masked else None), use_pallas=use_pallas))
         if solve_each_batch:
             beta = elm.solve_beta(stats, cfg.elm_lambda)
 
@@ -161,38 +188,81 @@ def _stacked_epoch(cfg, params_k, stats_k, xb, tb, lr, *,
                 return elm.elm_loss(hp, beta, t)
 
             grads = jax.grad(loss)(params)
-            params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            if masked:
+                params = jax.tree.map(
+                    lambda p, g: jnp.where(m > 0, p - lr * g, p),
+                    params, grads)
+            else:
+                params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
         return params, stats
 
     def body(carry, batch):
         p, s = carry
-        x, t = batch
-        return jax.vmap(member_step)(p, s, x, t), None
+        x, t, m = batch
+        return jax.vmap(member_step)(p, s, x, t, m), None
 
-    (params_k, stats_k), _ = jax.lax.scan(body, (params_k, stats_k), (xb, tb))
+    (params_k, stats_k), _ = jax.lax.scan(body, (params_k, stats_k),
+                                          (xb, tb, mb))
     return params_k, stats_k
+
+
+def _epoch_scan_arrays(partitions, batch_size, rngs, num_classes,
+                       chunk_batches):
+    """Scan-major padded epoch arrays on the HOST: xb (nb, k, B, ...),
+    tb (nb, k, B, C) one-hot, mb (nb, k) validity, plus the chunk length
+    (nb itself when not chunking). ``rngs`` are the live per-member streams
+    — each call consumes one permutation per member, so the caller's epoch
+    loop advances them in lockstep with ``train_member``. nb is rounded up
+    to a chunk multiple so every chunk shares one fixed shape (= one jit
+    cache entry)."""
+    nb = max(len(p.x) // batch_size for p in partitions)
+    chunk, num_batches = nb, None
+    if chunk_batches is not None and 0 < chunk_batches < nb:
+        chunk = chunk_batches
+        num_batches = -(-nb // chunk) * chunk
+    xs, ys, mk = padded_stacked_epoch_batches(partitions, batch_size, rngs,
+                                              num_batches=num_batches)
+    tb = one_hot(ys.reshape(-1), num_classes).reshape(*ys.shape, num_classes)
+    return (np.swapaxes(xs, 0, 1), np.swapaxes(tb, 0, 1),
+            np.swapaxes(mk, 0, 1), chunk)
+
+
+def _put_chunk(chunk, mesh):
+    """Start the host→device transfer of one (xb, tb, mb) chunk. device_put
+    is async, so issuing chunk i+1 here while chunk i's scan runs double-
+    buffers the pipeline. With a mesh the member dim (axis 1 of every
+    scan-major array) lands on the 'pod' axis alongside the params."""
+    if mesh is None:
+        return jax.device_put(chunk)
+    return jax.device_put(
+        chunk, sharding.stacked_batch_shardings(chunk, mesh, member_axis=1))
 
 
 def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
                           *, epochs: int, lr_schedule, batch_size: int,
                           seed_base: int = 1000,
                           use_pallas: Optional[bool] = None,
-                          mesh=None) -> StackedMembers:
+                          mesh=None,
+                          chunk_batches: Optional[int] = None) -> StackedMembers:
     """Algorithm 2 Map phase, vectorised: k members trained as one stacked
     program. Matches ``train_member(..., seed=seed_base + i)`` per member
-    (same init, same batch order, same update sequence). ``mesh`` optionally
-    places the member dim on the 'pod' mesh axis (see
-    ``sharding.member_dim_shardings``); the scan then runs SPMD across pods."""
+    (same init, same per-epoch batch order, same update sequence) for ANY
+    partition sizes — unequal shards are padded to the max batch count and
+    masked out (see ``_stacked_epoch``). ``chunk_batches`` caps how many
+    batch steps are resident on device at once: the epoch streams as
+    double-buffered host→device chunks, one scan dispatch per chunk,
+    bit-identical to the monolithic scan. ``mesh`` optionally places the
+    member dim on the 'pod' mesh axis (see
+    ``sharding.member_dim_shardings``); the scan then runs SPMD across
+    pods."""
+    if chunk_batches is not None and chunk_batches < 1:
+        raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
     k = len(partitions)
     F, C = cnn.feature_dim(cfg), cfg.num_classes
     use_pallas = resolve_use_pallas(use_pallas)
-
-    xs, ys = stacked_epoch_batches(partitions, batch_size,
-                                   [seed_base + i for i in range(k)])
-    # member-major (k, nb, ...) -> scan-major (nb, k, ...)
-    xb = jnp.asarray(np.swapaxes(xs, 0, 1))
-    tb = jnp.asarray(np.swapaxes(
-        one_hot(ys.reshape(-1), C).reshape(*ys.shape, C), 0, 1))
+    # live per-member streams: each epoch's builder call draws the next
+    # permutation (mirrors train_member's stream, no epoch replay)
+    rngs = [np.random.default_rng(seed_base + i) for i in range(k)]
 
     params_k = broadcast_member_dim(init_params, k)
     if mesh is not None:
@@ -203,13 +273,23 @@ def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
         (True, float(lr_schedule(e))) for e in range(epochs)]
     stats_k = None
     for solve_each_batch, lr in passes:
+        xb, tb, mb, chunk = _epoch_scan_arrays(partitions, batch_size, rngs,
+                                               C, chunk_batches)
+        masked = bool(np.any(mb == 0.0))
         stats_k = elm.zero_stats_stacked(k, F, C)
         if mesh is not None:
             stats_k = jax.device_put(
                 stats_k, sharding.member_dim_shardings(stats_k, mesh))
-        params_k, stats_k = _stacked_epoch(
-            cfg, params_k, stats_k, xb, tb, jnp.asarray(lr, jnp.float32),
-            solve_each_batch=solve_each_batch, use_pallas=use_pallas)
+        chunks = chunk_scan_major((xb, tb, mb), chunk)
+        lr_dev = jnp.asarray(lr, jnp.float32)
+        nxt = _put_chunk(chunks[0], mesh)
+        for i in range(len(chunks)):
+            cur, nxt = nxt, (_put_chunk(chunks[i + 1], mesh)
+                             if i + 1 < len(chunks) else None)
+            params_k, stats_k = _stacked_epoch(
+                cfg, params_k, stats_k, *cur, lr_dev,
+                solve_each_batch=solve_each_batch, use_pallas=use_pallas,
+                masked=masked)
     return StackedMembers(params_k, elm.solve_beta(stats_k, cfg.elm_lambda))
 
 
@@ -234,21 +314,24 @@ def distributed_cnn_elm(cfg, partitions: List[Partition], key, *,
                         epochs: int, lr_schedule, batch_size: int,
                         stacked: bool = False,
                         use_pallas: Optional[bool] = None,
-                        mesh=None, weight_by_shard: bool = False):
+                        mesh=None, weight_by_shard: bool = False,
+                        chunk_batches: Optional[int] = None):
     """Full Algorithm 2: same init for all machines (line 3), independent
     training (Map), weight averaging (Reduce). Returns (members, averaged).
 
-    ``stacked=True`` runs the vmap+scan fast path (equal batch counts per
-    shard required — floor(len/batch_size) must match, see
-    ``stacked_epoch_batches``); ``weight_by_shard=True`` weights the Reduce
-    by shard size for unequal partitions on either path."""
+    ``stacked=True`` runs the vmap+scan fast path for ANY partition sizes
+    (unequal shards are padded + masked); ``chunk_batches`` streams the
+    epoch as double-buffered host→device chunks to bound device memory;
+    ``weight_by_shard=True`` weights the Reduce by shard size for unequal
+    partitions on either path."""
     init = cnn.init_params(cfg, key)
     weights = [len(p.x) for p in partitions] if weight_by_shard else None
     if stacked:
         sm = train_members_stacked(cfg, init, partitions, epochs=epochs,
                                    lr_schedule=lr_schedule,
                                    batch_size=batch_size,
-                                   use_pallas=use_pallas, mesh=mesh)
+                                   use_pallas=use_pallas, mesh=mesh,
+                                   chunk_batches=chunk_batches)
         members = sm.unstack()
         return members, (average_models(members, weights=weights)
                          if weights is not None else sm.averaged())
@@ -260,20 +343,30 @@ def distributed_cnn_elm(cfg, partitions: List[Partition], key, *,
 
 
 def evaluate(cfg, model: CNNELMModel, x: np.ndarray, y: np.ndarray,
-             batch_size: int = 512) -> float:
+             batch_size: int = 512,
+             use_pallas: Optional[bool] = None) -> float:
+    """Accuracy. ``use_pallas`` resolves per call (None = auto policy), so
+    callers can force the eval backend and REPRO_USE_PALLAS flips are not
+    baked into the first trace."""
+    use_pallas = resolve_use_pallas(use_pallas)
     correct, total = 0, 0
     for i in range(0, len(x), batch_size):
-        s = _scores(cfg, model.cnn_params, model.beta, jnp.asarray(x[i:i + batch_size]))
+        s = _scores(cfg, model.cnn_params, model.beta,
+                    jnp.asarray(x[i:i + batch_size]), use_pallas=use_pallas)
         correct += int(jnp.sum(jnp.argmax(s, -1) == jnp.asarray(y[i:i + batch_size])))
         total += len(y[i:i + batch_size])
     return correct / total
 
 
-def kappa(cfg, model: CNNELMModel, x, y, batch_size: int = 512):
-    """Cohen's kappa (the paper's secondary metric, Table 1c)."""
+def kappa(cfg, model: CNNELMModel, x, y, batch_size: int = 512,
+          use_pallas: Optional[bool] = None):
+    """Cohen's kappa (the paper's secondary metric, Table 1c). Backend
+    resolution matches ``evaluate``."""
+    use_pallas = resolve_use_pallas(use_pallas)
     preds = []
     for i in range(0, len(x), batch_size):
-        s = _scores(cfg, model.cnn_params, model.beta, jnp.asarray(x[i:i + batch_size]))
+        s = _scores(cfg, model.cnn_params, model.beta,
+                    jnp.asarray(x[i:i + batch_size]), use_pallas=use_pallas)
         preds.append(np.asarray(jnp.argmax(s, -1)))
     p = np.concatenate(preds)
     C = cfg.num_classes

@@ -41,13 +41,22 @@ def zero_stats_stacked(k: int, num_features: int, num_classes: int) -> ELMStats:
         jnp.zeros((k,), jnp.float32))
 
 
-def batch_stats(h, t, *, activation: bool = True,
+def batch_stats(h, t, *, activation: bool = True, mask=None,
                 use_pallas: Optional[bool] = None) -> ELMStats:
-    """Map step: stats of one batch. h: (n, L) raw features, t: (n, C)."""
+    """Map step: stats of one batch. h: (n, L) raw features, t: (n, C).
+
+    ``mask`` (broadcastable to (n,), optional) weights rows into U, V AND n:
+    a zero entry drops the row entirely, which is how the padded stacked Map
+    phase cancels padding batches (mask = the per-batch validity bit
+    broadcast over the batch's rows)."""
     if activation:
         h = optimal_tanh(h)
-    u, v = stats_ops.elm_stats(h, t, use_pallas=use_pallas)
-    return ELMStats(u, v, jnp.asarray(h.shape[0], jnp.float32))
+    if mask is None:
+        u, v = stats_ops.elm_stats(h, t, use_pallas=use_pallas)
+        return ELMStats(u, v, jnp.asarray(h.shape[0], jnp.float32))
+    mask = jnp.broadcast_to(jnp.asarray(mask, jnp.float32), (h.shape[0],))
+    u, v = stats_ops.elm_stats(h, t, mask=mask, use_pallas=use_pallas)
+    return ELMStats(u, v, jnp.sum(mask))
 
 
 def add_stats(a: ELMStats, b: ELMStats) -> ELMStats:

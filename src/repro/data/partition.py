@@ -4,16 +4,35 @@
                         distribution (the extended-MNIST regime, Table 4/5).
 ``partition_by_class``— contiguous/class-sorted split: machines see skewed
                         distributions (the not-MNIST regime, Table 2/3).
+``partition_unequal`` — shuffle then split into explicit shard sizes: the
+                        'training data distribution needs to be carefully
+                        selected' regime the paper flags as its drawback.
 
 ``batches`` is the streaming iterator (host loop, the faithful path);
 ``epoch_batch_arrays``/``stacked_epoch_batches`` materialise the SAME batch
 order as fixed-shape arrays so the whole epoch can ride one ``lax.scan`` —
 the stacked Map-phase contract (see docs/perf.md).
+
+Epoch rng contract (shared by every builder): one ``default_rng(seed)``
+stream yields one permutation per epoch, so epoch e's batch order is the
+(e+1)-th draw. ``start_epoch``/``epoch`` advance the stream without
+consuming data — the stacked per-epoch arrays and the streaming iterator
+replay identical orders at every epoch, not just the first. ``seed`` may
+also be a ``np.random.Generator``, consumed IN PLACE
+(``default_rng(gen)`` passes it through): the training drivers keep one
+stream per member across their epoch loop so epoch e costs one draw
+instead of replaying e+1 permutations from scratch.
+
+``padded_stacked_epoch_batches`` lifts the equal-batch-count restriction:
+every member's epoch is padded to the max batch count and a per-batch
+validity mask (1 = real, 0 = padding) rides along; masked batches
+contribute zero to the ELM stats and skip the SGD update (see
+``core.cnn_elm``/``core.elm``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,10 +65,37 @@ def partition_contiguous(x: np.ndarray, y: np.ndarray, k: int) -> List[Partition
     return [Partition(x[i * p:(i + 1) * p], y[i * p:(i + 1) * p]) for i in range(k)]
 
 
-def batches(part: Partition, batch_size: int, seed: int = 0, epochs: int = 1):
-    """Shuffled minibatch iterator over one partition (paper line 4)."""
+def partition_unequal(x: np.ndarray, y: np.ndarray, sizes: Sequence[int],
+                      seed: int = 0) -> List[Partition]:
+    """Shuffle then split into shards of the given row counts — the unequal
+    regime both Map paths must now handle (masked-stacked or sequential +
+    ``average_models(weights=sizes)``). When ``sum(sizes) < len(x)`` the
+    leftover rows are deliberately DROPPED (a subsample, like the paper's
+    floor(m/k) truncation); oversubscribing raises."""
+    if sum(sizes) > len(x):
+        raise ValueError(f"sizes {list(sizes)} sum past {len(x)} rows")
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(x))
+    out, at = [], 0
+    for s in sizes:
+        out.append(Partition(x[idx[at:at + s]], y[idx[at:at + s]]))
+        at += s
+    return out
+
+
+def batches(part: Partition, batch_size: int, seed: int = 0, epochs: int = 1,
+            start_epoch: int = 0):
+    """Shuffled minibatch iterator over one partition (paper line 4).
+
+    ``start_epoch`` skips that many permutations of the rng stream first, so
+    ``batches(p, B, seed, start_epoch=e)`` yields exactly epoch e of
+    ``batches(p, B, seed, epochs=e+1)`` — the per-epoch-reshuffle contract
+    shared with ``epoch_batch_arrays``. Pass an in-place Generator as
+    ``seed`` (with ``start_epoch=0``) to draw from a live stream instead."""
     rng = np.random.default_rng(seed)
     n = (len(part.x) // batch_size) * batch_size
+    for _ in range(start_epoch):
+        rng.permutation(len(part.x))
     for _ in range(epochs):
         idx = rng.permutation(len(part.x))[:n]
         for i in range(0, n, batch_size):
@@ -57,17 +103,20 @@ def batches(part: Partition, batch_size: int, seed: int = 0, epochs: int = 1):
             yield part.x[j], part.y[j]
 
 
-def epoch_batch_arrays(part: Partition, batch_size: int,
-                       seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    """One epoch of ``batches(part, batch_size, seed)`` as fixed-shape arrays:
-    x (nb, B, ...) and y (nb, B). Bit-identical batch order to the iterator
-    (same rng stream, same floor(n/B)*B truncation), so the scan-based fast
-    path consumes exactly the data the sequential reference would."""
+def epoch_batch_arrays(part: Partition, batch_size: int, seed: int = 0,
+                       epoch: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Epoch ``epoch`` of ``batches(part, batch_size, seed)`` as fixed-shape
+    arrays: x (nb, B, ...) and y (nb, B). Bit-identical batch order to the
+    iterator (same rng stream advanced ``epoch`` permutations, same
+    floor(n/B)*B truncation), so the scan-based fast path consumes exactly
+    the data the sequential reference would at that epoch."""
     rng = np.random.default_rng(seed)
     n = (len(part.x) // batch_size) * batch_size
     if n == 0:
         raise ValueError(
             f"partition of {len(part.x)} rows yields no batch of {batch_size}")
+    for _ in range(epoch):
+        rng.permutation(len(part.x))
     idx = rng.permutation(len(part.x))[:n]
     nb = n // batch_size
     x = part.x[idx].reshape(nb, batch_size, *part.x.shape[1:])
@@ -76,17 +125,65 @@ def epoch_batch_arrays(part: Partition, batch_size: int,
 
 
 def stacked_epoch_batches(partitions: Sequence[Partition], batch_size: int,
-                          seeds: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+                          seeds: Sequence[int],
+                          epoch: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """All k members' epoch batches stacked member-major: x (k, nb, B, ...)
-    and y (k, nb, B). Requires every partition to yield the same batch count
-    (the paper's P = floor(m/k) split guarantees it); unequal shards must use
-    the sequential path (or re-partition)."""
-    per = [epoch_batch_arrays(p, batch_size, seed=s)
+    and y (k, nb, B). This is the STRICT variant: every partition must yield
+    the same batch count (the paper's P = floor(m/k) split guarantees it).
+    Unequal shards take ``padded_stacked_epoch_batches`` instead, which pads
+    to the max count and returns a validity mask."""
+    per = [epoch_batch_arrays(p, batch_size, seed=s, epoch=epoch)
            for p, s in zip(partitions, seeds)]
     counts = {x.shape[0] for x, _ in per}
     if len(counts) != 1:
         raise ValueError(
             f"stacked Map phase needs equal batch counts per member, got "
-            f"{sorted(x.shape[0] for x, _ in per)}; use the sequential path "
-            f"for unequal shards")
+            f"{sorted(x.shape[0] for x, _ in per)}; use "
+            f"padded_stacked_epoch_batches for unequal shards")
     return (np.stack([x for x, _ in per]), np.stack([y for _, y in per]))
+
+
+def padded_stacked_epoch_batches(
+        partitions: Sequence[Partition], batch_size: int,
+        seeds: Sequence[int], epoch: int = 0,
+        num_batches: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Member-major epoch batches padded to a common batch count, plus the
+    per-batch validity mask: x (k, nb, B, ...), y (k, nb, B),
+    mask (k, nb) f32 with 1.0 on real batches and 0.0 on padding.
+
+    Each member's prefix is bit-identical to its ``epoch_batch_arrays``;
+    padding rows are zeros (their contribution is cancelled by the mask, not
+    by the data). ``num_batches`` rounds the common count further up — the
+    chunked scan uses it to make every chunk the same fixed shape."""
+    per = [epoch_batch_arrays(p, batch_size, seed=s, epoch=epoch)
+           for p, s in zip(partitions, seeds)]
+    nb = max(x.shape[0] for x, _ in per)
+    if num_batches is not None:
+        if num_batches < nb:
+            raise ValueError(f"num_batches {num_batches} < max count {nb}")
+        nb = num_batches
+    k = len(per)
+    x0, y0 = per[0]
+    xs = np.zeros((k, nb) + x0.shape[1:], x0.dtype)
+    ys = np.zeros((k, nb) + y0.shape[1:], y0.dtype)
+    mask = np.zeros((k, nb), np.float32)
+    for i, (x, y) in enumerate(per):
+        xs[i, :x.shape[0]] = x
+        ys[i, :y.shape[0]] = y
+        mask[i, :x.shape[0]] = 1.0
+    return xs, ys, mask
+
+
+def chunk_scan_major(arrays: Sequence[np.ndarray], chunk_batches: int
+                     ) -> List[Tuple[np.ndarray, ...]]:
+    """Split scan-major arrays (leading dim = batch steps) into equal-size
+    chunks of ``chunk_batches`` steps. The leading dim must already be a
+    multiple of ``chunk_batches`` (pad via ``num_batches`` upstream); the
+    returned chunks are views, so nothing is copied until device_put."""
+    nb = arrays[0].shape[0]
+    if nb % chunk_batches:
+        raise ValueError(f"{nb} steps do not split into chunks of "
+                         f"{chunk_batches}; pad with num_batches first")
+    return [tuple(a[i:i + chunk_batches] for a in arrays)
+            for i in range(0, nb, chunk_batches)]

@@ -107,6 +107,23 @@ def member_dim_shardings(tree, mesh: Mesh, rules=None):
     return jax.tree.map(one, tree)
 
 
+def stacked_batch_shardings(tree, mesh: Mesh, member_axis: int = 1,
+                            rules=None):
+    """NamedSharding pytree for scan-major stacked BATCH arrays
+    (nb, k, B, ...): the member dim sits at ``member_axis`` (axis 1 in the
+    stacked Map phase's scan-major layout), everything else replicated. The
+    chunked host→device pipeline uses this so each pod only receives its own
+    members' batches; same replication fallback as
+    ``member_dim_shardings``."""
+    def one(a):
+        logical = [None] * a.ndim
+        logical[member_axis] = "member"
+        return NamedSharding(mesh,
+                             resolve_spec(a.shape, tuple(logical), mesh,
+                                          rules))
+    return jax.tree.map(one, tree)
+
+
 def constrain(x, logical, mesh: Mesh, rules=None):
     """In-function sharding constraint from a logical spec."""
     spec = resolve_spec(x.shape, logical, mesh, rules)

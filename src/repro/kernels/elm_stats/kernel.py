@@ -11,6 +11,12 @@ remark about GPU shared memory).
 
 Grid (i over L tiles, j over L tiles, k over n tiles); the V accumulator
 runs in the j==0 lane so every (i,k) pair touches it exactly once.
+
+An optional per-row weight/validity mask (padded-batch support for the
+masked stacked Map phase) scales the TRANSPOSED operand only — the row
+weight enters each product exactly once, so U = Hᵀdiag(m)H and
+V = Hᵀdiag(m)T hold for fractional weights, not just binary masks. The
+mask rides as an (n, 1) column so its row-block streams with H's.
 """
 from __future__ import annotations
 
@@ -27,16 +33,23 @@ from repro.kernels import resolve_interpret
 BL, BN = 128, 512  # L-tile and n(row)-tile
 
 
-def _elm_stats_kernel(h_i_ref, h_j_ref, t_ref, u_ref, v_ref,
-                      acc_u, acc_v, *, nk: int):
+def _elm_stats_kernel(*refs, nk: int, masked: bool):
+    if masked:
+        h_i_ref, h_j_ref, t_ref, m_ref, u_ref, v_ref, acc_u, acc_v = refs
+    else:
+        h_i_ref, h_j_ref, t_ref, u_ref, v_ref, acc_u, acc_v = refs
     j = pl.program_id(1)
     k = pl.program_id(2)
+
+    hi = h_i_ref[...]
+    if masked:
+        hi = hi * m_ref[...]  # (bn, 1) broadcasts over the bl columns
 
     @pl.when(k == 0)
     def _zero_u():
         acc_u[...] = jnp.zeros_like(acc_u)
 
-    acc_u[...] += jnp.dot(h_i_ref[...].T, h_j_ref[...],
+    acc_u[...] += jnp.dot(hi.T, h_j_ref[...],
                           preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
@@ -50,7 +63,7 @@ def _elm_stats_kernel(h_i_ref, h_j_ref, t_ref, u_ref, v_ref,
 
     @pl.when(j == 0)
     def _acc_v():
-        acc_v[...] += jnp.dot(h_i_ref[...].T, t_ref[...],
+        acc_v[...] += jnp.dot(hi.T, t_ref[...],
                               preferred_element_type=jnp.float32)
 
     @pl.when((j == 0) & (k == nk - 1))
@@ -59,10 +72,11 @@ def _elm_stats_kernel(h_i_ref, h_j_ref, t_ref, u_ref, v_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("bl", "bn", "interpret"))
-def _elm_stats(h, t, *, bl: int, bn: int, interpret: bool):
+def _elm_stats(h, t, mask, *, bl: int, bn: int, interpret: bool):
     n, L = h.shape
     n2, C = t.shape
     assert n == n2
+    masked = mask is not None
     bl = min(bl, max(L, 8))
     bn = min(bn, max(n, 8))
     Lp, Np = (-(-L // bl)) * bl, (-(-n // bn)) * bn
@@ -70,14 +84,20 @@ def _elm_stats(h, t, *, bl: int, bn: int, interpret: bool):
     hp = jnp.pad(h, ((0, Np - n), (0, Lp - L)))
     tp = jnp.pad(t, ((0, Np - n), (0, Cp - C)))
     nk = Np // bn
+    in_specs = [
+        pl.BlockSpec((bn, bl), lambda i, j, k: (k, i)),  # H rows, col-tile i
+        pl.BlockSpec((bn, bl), lambda i, j, k: (k, j)),  # H rows, col-tile j
+        pl.BlockSpec((bn, Cp), lambda i, j, k: (k, 0)),  # T rows
+    ]
+    operands = [hp, hp, tp]
+    if masked:
+        mp = jnp.pad(mask.astype(jnp.float32), (0, Np - n))[:, None]
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i, j, k: (k, 0)))
+        operands.append(mp)
     u, v = pl.pallas_call(
-        functools.partial(_elm_stats_kernel, nk=nk),
+        functools.partial(_elm_stats_kernel, nk=nk, masked=masked),
         grid=(Lp // bl, Lp // bl, nk),
-        in_specs=[
-            pl.BlockSpec((bn, bl), lambda i, j, k: (k, i)),  # H rows, col-tile i
-            pl.BlockSpec((bn, bl), lambda i, j, k: (k, j)),  # H rows, col-tile j
-            pl.BlockSpec((bn, Cp), lambda i, j, k: (k, 0)),  # T rows
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bl, bl), lambda i, j, k: (i, j)),
             pl.BlockSpec((bl, Cp), lambda i, j, k: (i, 0)),
@@ -89,15 +109,16 @@ def _elm_stats(h, t, *, bl: int, bn: int, interpret: bool):
         scratch_shapes=[pltpu.VMEM((bl, bl), jnp.float32),
                         pltpu.VMEM((bl, Cp), jnp.float32)],
         interpret=interpret,
-    )(hp, hp, tp)
+    )(*operands)
     return u[:L, :L], v[:L, :C]
 
 
-def elm_stats(h, t, *, bl: int = BL, bn: int = BN,
+def elm_stats(h, t, mask=None, *, bl: int = BL, bn: int = BN,
               interpret: Optional[bool] = None):
-    """h: (n, L), t: (n, C) -> (U (L,L) f32, V (L,C) f32).
+    """h: (n, L), t: (n, C), mask: optional (n,) row weights
+    -> (U (L,L) f32, V (L,C) f32).
 
     ``interpret=None`` = auto: compiled on TPU, interpreter elsewhere.
     Resolved outside the jit so the resolved bool is the static cache key."""
-    return _elm_stats(h, t, bl=bl, bn=bn,
+    return _elm_stats(h, t, mask, bl=bl, bn=bn,
                       interpret=resolve_interpret(interpret))

@@ -17,16 +17,18 @@ from repro.kernels.elm_stats.kernel import elm_stats as _pallas_stats
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def _elm_stats(h, t, *, use_pallas: bool, interpret: bool):
+def _elm_stats(h, t, mask, *, use_pallas: bool, interpret: bool):
     if use_pallas:
-        return _pallas_stats(h, t, interpret=interpret)
-    return ref.elm_stats_ref(h, t)
+        return _pallas_stats(h, t, mask, interpret=interpret)
+    return ref.elm_stats_ref(h, t, mask)
 
 
-def elm_stats(h, t, *, use_pallas: Optional[bool] = None):
+def elm_stats(h, t, *, mask=None, use_pallas: Optional[bool] = None):
     """h: (n, L) hidden features, t: (n, C) targets -> (U, V) in f32.
+    ``mask``: optional (n,) per-row weights — U = Hᵀdiag(m)H, V = Hᵀdiag(m)T
+    (zero weight drops the row; the padded stacked Map phase's contract).
 
     Policy (use_pallas and interpret) resolves outside the jit (resolved
     bools = static cache keys) so env overrides apply on the next call."""
-    return _elm_stats(h, t, use_pallas=resolve_use_pallas(use_pallas),
+    return _elm_stats(h, t, mask, use_pallas=resolve_use_pallas(use_pallas),
                       interpret=resolve_interpret(None))

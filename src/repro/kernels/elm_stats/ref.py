@@ -4,6 +4,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def elm_stats_ref(h, t):
+def elm_stats_ref(h, t, mask=None):
+    """U = Hᵀ diag(mask) H, V = Hᵀ diag(mask) T. ``mask=None`` means all-ones;
+    row weights enter ONCE (the left operand), so binary masks drop rows and
+    fractional masks weight them — never square them."""
     hf = h.astype(jnp.float32)
-    return hf.T @ hf, hf.T @ t.astype(jnp.float32)
+    tf = t.astype(jnp.float32)
+    hm = hf if mask is None else hf * mask.astype(jnp.float32)[:, None]
+    return hm.T @ hf, hm.T @ tf

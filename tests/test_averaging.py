@@ -77,3 +77,24 @@ def test_average_preserves_dtype():
           for i in range(3)]
     avg = average_trees(ms)
     assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(avg))
+
+
+def test_average_bf16_accumulates_in_f32():
+    """Regression: the member sum used to accumulate in leaf dtype, so a
+    bf16 backbone lost ~k·2⁻⁸ relative precision before the divide. The f32
+    accumulator must land on the f32-exact mean (to one final bf16 round)
+    and agree with the weighted path under uniform weights."""
+    rng = np.random.default_rng(11)
+    k = 16
+    ms = [{"w": jnp.asarray(
+        rng.normal(loc=1.0, scale=0.05, size=(16, 16)).astype(np.float32)
+    ).astype(jnp.bfloat16)} for _ in range(k)]
+    avg = average_trees(ms)
+    ref = np.mean([np.asarray(m["w"], np.float32) for m in ms], axis=0)
+    # within one bf16 ulp of the f32-exact mean (values are ~1.0, ulp 2⁻⁸)
+    np.testing.assert_allclose(np.asarray(avg["w"], np.float32), ref,
+                               atol=2 ** -8, rtol=0)
+    # uniform weights ≡ the weighted path (both scale/accumulate in f32)
+    wavg = weighted_average_trees(ms, [1.0] * k)
+    np.testing.assert_array_equal(np.asarray(avg["w"], np.float32),
+                                  np.asarray(wavg["w"], np.float32))

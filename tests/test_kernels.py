@@ -101,6 +101,51 @@ def test_elm_stats_property(n, L, C):
                                rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("n,L,C", [(64, 10, 3), (300, 50, 10), (17, 7, 2)])
+def test_elm_stats_masked_matches_ref(n, L, C):
+    """Mask-aware kernel vs oracle: binary masks drop rows from U/V."""
+    h = _rand(n, L)
+    t = _rand(n, C)
+    m = jnp.asarray((RNG.random(n) > 0.4).astype(np.float32))
+    u1, v1 = elm_ops.elm_stats(h, t, mask=m, use_pallas=True)
+    u2, v2 = elm_ref.elm_stats_ref(h, t, m)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-3)
+    hs = np.asarray(h)[np.asarray(m) > 0]
+    ts = np.asarray(t)[np.asarray(m) > 0]
+    np.testing.assert_allclose(np.asarray(u1), hs.T @ hs, rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(v1), hs.T @ ts, rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_elm_stats_fractional_mask_weights_once():
+    """Row weights must enter U and V exactly ONCE (Hᵀdiag(m)H), never
+    squared — the masked kernel scales only the transposed operand."""
+    h = _rand(50, 12)
+    t = _rand(50, 4)
+    m = jnp.asarray(RNG.random(50).astype(np.float32))
+    u, v = elm_ops.elm_stats(h, t, mask=m, use_pallas=True)
+    hm = np.asarray(h) * np.asarray(m)[:, None]
+    np.testing.assert_allclose(np.asarray(u), hm.T @ np.asarray(h),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(v), hm.T @ np.asarray(t),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_elm_stats_ones_mask_bit_identical():
+    """An all-ones mask must not perturb a single bit vs the unmasked op —
+    the equal-shard fast path's guarantee."""
+    h = _rand(128, 33)
+    t = _rand(128, 5)
+    u0, v0 = elm_ops.elm_stats(h, t, use_pallas=True)
+    u1, v1 = elm_ops.elm_stats(h, t, mask=jnp.ones(128), use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(u0), np.asarray(u1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
 def test_elm_stats_u_symmetric_psd():
     h = _rand(100, 40)
     t = _rand(100, 5)

@@ -1,6 +1,8 @@
 """Stacked (vmap + lax.scan) Map phase vs the sequential Algorithm 2
-reference: numerical equivalence, the scan batching contract, the weighted
-Reduce, and the map-phase benchmark smoke run."""
+reference: numerical equivalence (equal AND unequal shards via the
+padded/masked scan), the per-epoch-reshuffle rng contract, the chunked
+double-buffered scan's bit-identity, the weighted Reduce, the pluggable
+eval backend, and the map-phase benchmark smoke runs."""
 import json
 
 import jax
@@ -10,8 +12,10 @@ import pytest
 from repro.configs.base import get_reduced_config, replace
 from repro.core import cnn_elm
 from repro.core.averaging import weighted_average_trees
-from repro.data.partition import (Partition, batches, epoch_batch_arrays,
-                                  partition_iid, stacked_epoch_batches)
+from repro.data.partition import (Partition, batches, chunk_scan_major,
+                                  epoch_batch_arrays,
+                                  padded_stacked_epoch_batches, partition_iid,
+                                  partition_unequal, stacked_epoch_batches)
 from repro.data.synthetic import make_extended_mnist
 from repro.models import cnn
 from repro.optim.schedules import dynamic_paper
@@ -24,6 +28,14 @@ KEY = jax.random.PRNGKey(0)
 def parts():
     ds = make_extended_mnist(n_per_class=20, seed=0)
     return partition_iid(ds.x, ds.y, k=3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def uneq_parts():
+    """Shards with 3/2/1 batches of 32 — the regime the stacked path used
+    to reject."""
+    ds = make_extended_mnist(n_per_class=20, seed=0)
+    return partition_unequal(ds.x, ds.y, [96, 64, 33], seed=1)
 
 
 def _assert_models_close(a, b, rtol, atol_beta, atol_params):
@@ -46,12 +58,80 @@ def test_epoch_batch_arrays_match_iterator(parts):
     assert xs.shape[0] == i + 1
 
 
+def test_epoch_batch_arrays_reshuffles_per_epoch(parts):
+    """Epoch e's arrays replay epoch e of the multi-epoch iterator — each
+    epoch a FRESH permutation from one rng stream (regression: both paths
+    used to replay epoch 0's permutation forever)."""
+    part = parts[0]
+    stream = list(batches(part, 32, seed=7, epochs=3))
+    nb = epoch_batch_arrays(part, 32, seed=7, epoch=0)[0].shape[0]
+    for e in range(3):
+        xs, ys = epoch_batch_arrays(part, 32, seed=7, epoch=e)
+        for i in range(nb):
+            np.testing.assert_array_equal(xs[i], stream[e * nb + i][0])
+            np.testing.assert_array_equal(ys[i], stream[e * nb + i][1])
+    y0 = epoch_batch_arrays(part, 32, seed=7, epoch=0)[1]
+    y1 = epoch_batch_arrays(part, 32, seed=7, epoch=1)[1]
+    assert not np.array_equal(y0, y1), "epochs must reshuffle"
+
+
+def test_batches_start_epoch_contract(parts):
+    """batches(start_epoch=e) == epoch e of batches(epochs=e+1)."""
+    part = parts[0]
+    stream = list(batches(part, 32, seed=3, epochs=3))
+    nb = len(stream) // 3
+    tail = list(batches(part, 32, seed=3, start_epoch=2))
+    assert len(tail) == nb
+    for i, (x, y) in enumerate(tail):
+        np.testing.assert_array_equal(x, stream[2 * nb + i][0])
+        np.testing.assert_array_equal(y, stream[2 * nb + i][1])
+
+
 def test_stacked_epoch_batches_rejects_unequal():
     x = np.zeros((100, 4, 4), np.float32)
     y = np.zeros((100,), np.int32)
     uneven = [Partition(x[:64], y[:64]), Partition(x[:32], y[:32])]
     with pytest.raises(ValueError, match="equal batch counts"):
         stacked_epoch_batches(uneven, 32, [0, 1])
+
+
+def test_padded_stacked_epoch_batches(uneq_parts):
+    """Padded builder: per-member prefix bit-identical to the member's own
+    epoch arrays, zeros + mask 0 past it, all-ones mask when shards are
+    equal."""
+    xs, ys, mask = padded_stacked_epoch_batches(uneq_parts, 32,
+                                                [1000, 1001, 1002])
+    counts = [len(p.x) // 32 for p in uneq_parts]
+    assert xs.shape[:2] == (3, max(counts)) and mask.shape == (3, max(counts))
+    for i, p in enumerate(uneq_parts):
+        ref_x, ref_y = epoch_batch_arrays(p, 32, seed=1000 + i)
+        np.testing.assert_array_equal(xs[i, :counts[i]], ref_x)
+        np.testing.assert_array_equal(ys[i, :counts[i]], ref_y)
+        np.testing.assert_array_equal(mask[i],
+                                      [1.0] * counts[i]
+                                      + [0.0] * (max(counts) - counts[i]))
+        assert not xs[i, counts[i]:].any()
+    # num_batches rounds the common count further up (chunk alignment)
+    xs4, _, mask4 = padded_stacked_epoch_batches(uneq_parts, 32,
+                                                 [1000, 1001, 1002],
+                                                 num_batches=4)
+    assert xs4.shape[1] == 4 and not mask4[:, 3].any()
+    with pytest.raises(ValueError, match="num_batches"):
+        padded_stacked_epoch_batches(uneq_parts, 32, [0, 1, 2], num_batches=1)
+
+
+def test_padded_equal_shards_all_ones(parts):
+    _, _, mask = padded_stacked_epoch_batches(parts, 32, [0, 1, 2])
+    np.testing.assert_array_equal(mask, np.ones_like(mask))
+
+
+def test_chunk_scan_major():
+    a = np.arange(24).reshape(6, 4)
+    chunks = chunk_scan_major((a,), 2)
+    assert len(chunks) == 3
+    np.testing.assert_array_equal(np.concatenate([c[0] for c in chunks]), a)
+    with pytest.raises(ValueError, match="chunks"):
+        chunk_scan_major((a,), 4)
 
 
 def test_stacked_equivalent_elm_only(parts):
@@ -136,6 +216,71 @@ def test_average_models_weighted(parts):
         cnn_elm.average_models(models, weights=[1.0])
 
 
+def test_stacked_unequal_elm_only_bit_exact(uneq_parts):
+    """epochs=0 over 3/2/1-batch shards: each masked-stacked member must be
+    BIT-identical to its own sequential run (padding batches contribute
+    exactly zero), and the shard-weighted Reduce must agree."""
+    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
+        CFG, uneq_parts, KEY, epochs=0, lr_schedule=None, batch_size=32,
+        weight_by_shard=True)
+    m_st, avg_st = cnn_elm.distributed_cnn_elm(
+        CFG, uneq_parts, KEY, epochs=0, lr_schedule=None, batch_size=32,
+        stacked=True, weight_by_shard=True)
+    for a, b in zip(m_seq, m_st):
+        _assert_models_close(a, b, rtol=0, atol_beta=0, atol_params=0)
+    _assert_models_close(avg_seq, avg_st, rtol=1e-6, atol_beta=1e-6,
+                         atol_params=1e-6)
+
+
+def test_stacked_unequal_sgd_matches_sequential_weighted(uneq_parts):
+    """epochs=2 SGD over unequal shards: masked-stacked members and the
+    shard-weighted Reduce within rtol 1e-4 of the sequential reference —
+    the acceptance bar for lifting the equal-batch-count restriction."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
+        cfg, uneq_parts, KEY, epochs=2, lr_schedule=lr, batch_size=32,
+        weight_by_shard=True)
+    m_st, avg_st = cnn_elm.distributed_cnn_elm(
+        cfg, uneq_parts, KEY, epochs=2, lr_schedule=lr, batch_size=32,
+        stacked=True, weight_by_shard=True)
+    for a, b in zip(m_seq + [avg_seq], m_st + [avg_st]):
+        _assert_models_close(a, b, rtol=1e-4, atol_beta=2e-5,
+                             atol_params=1e-6)
+
+
+@pytest.mark.parametrize("chunk_batches", [1, 2])
+def test_chunked_scan_bit_identical(uneq_parts, chunk_batches):
+    """The double-buffered chunked epoch must be BIT-identical to the
+    monolithic scan — chunking only changes where host→device transfers
+    happen, never a single value. Unequal shards make the nastiest case:
+    mask padding AND chunk-tail padding interact."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    init = cnn.init_params(cfg, KEY)
+    mono = cnn_elm.train_members_stacked(cfg, init, uneq_parts, epochs=2,
+                                         lr_schedule=lr, batch_size=32)
+    chk = cnn_elm.train_members_stacked(cfg, init, uneq_parts, epochs=2,
+                                        lr_schedule=lr, batch_size=32,
+                                        chunk_batches=chunk_batches)
+    np.testing.assert_array_equal(np.asarray(mono.beta), np.asarray(chk.beta))
+    for la, lb in zip(jax.tree.leaves(mono.cnn_params),
+                      jax.tree.leaves(chk.cnn_params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_chunked_equal_shards_bit_identical(parts):
+    """Equal shards + a chunk size that doesn't divide the epoch (4 batches
+    into chunks of 3 → one padded tail chunk) still bit-identical."""
+    init = cnn.init_params(CFG, KEY)
+    mono = cnn_elm.train_members_stacked(CFG, init, parts, epochs=0,
+                                         lr_schedule=None, batch_size=32)
+    chk = cnn_elm.train_members_stacked(CFG, init, parts, epochs=0,
+                                        lr_schedule=None, batch_size=32,
+                                        chunk_batches=3)
+    np.testing.assert_array_equal(np.asarray(mono.beta), np.asarray(chk.beta))
+
+
 def test_weight_by_shard_on_stacked_path():
     """stacked=True must honour weight_by_shard (regression: it was silently
     ignored): shards of 40/33 rows both give 2 batches of 16, so the stacked
@@ -165,6 +310,35 @@ def test_backend_env_override_applies_per_call(monkeypatch):
     assert "conv_general_dilated" not in forced  # im2col + Pallas GEMM
 
 
+def test_eval_backend_is_pluggable():
+    """_scores takes use_pallas as a static arg (regression: the auto
+    policy was baked into the first trace, so REPRO_USE_PALLAS flips and
+    explicit backend requests were silently ignored for evaluate/kappa)."""
+    ds = make_extended_mnist(n_per_class=4, seed=2)
+    params = cnn.init_params(CFG, KEY)
+    beta = jax.numpy.zeros((cnn.feature_dim(CFG), CFG.num_classes))
+    x = jax.numpy.asarray(ds.x[:8])
+    ref = cnn_elm._scores.lower(CFG, params, beta, x,
+                                use_pallas=False).as_text()
+    forced = cnn_elm._scores.lower(CFG, params, beta, x,
+                                   use_pallas=True).as_text()
+    assert "stablehlo.convolution" in ref        # XLA reference path
+    assert "stablehlo.convolution" not in forced  # im2col + Pallas GEMM
+
+
+def test_evaluate_kappa_accept_backend(parts):
+    """evaluate/kappa honour an explicit backend and agree across them."""
+    ds = make_extended_mnist(n_per_class=4, seed=3)
+    model = cnn_elm.train_member(CFG, cnn.init_params(CFG, KEY), parts[0],
+                                 epochs=0, lr_schedule=None, batch_size=32)
+    a_ref = cnn_elm.evaluate(CFG, model, ds.x, ds.y, use_pallas=False)
+    a_pl = cnn_elm.evaluate(CFG, model, ds.x, ds.y, use_pallas=True)
+    assert a_ref == pytest.approx(a_pl)
+    k_ref = cnn_elm.kappa(CFG, model, ds.x, ds.y, use_pallas=False)
+    k_pl = cnn_elm.kappa(CFG, model, ds.x, ds.y, use_pallas=True)
+    assert k_ref == pytest.approx(k_pl, abs=1e-6)
+
+
 def test_map_phase_benchmark_smoke(tmp_path):
     """The benchmark must run end-to-end on a tiny config and emit a
     well-formed BENCH_map_phase.json."""
@@ -180,3 +354,36 @@ def test_map_phase_benchmark_smoke(tmp_path):
     assert on_disk["sequential_us"] > 0 and on_disk["stacked_us"] > 0
     assert payload["speedup"] == pytest.approx(
         payload["sequential_us"] / payload["stacked_us"])
+
+
+def test_map_phase_unequal_benchmark_smoke(tmp_path):
+    """Unequal-shard config: well-formed BENCH_map_phase_unequal.json with
+    genuinely unequal batch counts."""
+    from benchmarks import map_phase
+    payload = map_phase.run_unequal(k=2, n_per_class=8, epochs=1,
+                                    batch_size=16, iters=1,
+                                    out_dir=str(tmp_path))
+    on_disk = json.loads((tmp_path / "BENCH_map_phase_unequal.json")
+                         .read_text())
+    for key in ("sequential_us", "stacked_us", "speedup", "shard_sizes",
+                "batch_counts", "padded_batches", "pad_fraction"):
+        assert key in on_disk, key
+    assert len(set(payload["batch_counts"])) > 1
+    assert payload["padded_batches"] == max(payload["batch_counts"])
+
+
+def test_map_phase_chunked_benchmark_smoke(tmp_path):
+    """Chunked config: well-formed BENCH_map_phase_chunked.json; the
+    benchmark itself asserts bit-identity, so a divergence fails loudly."""
+    from benchmarks import map_phase
+    payload = map_phase.run_chunked(k=2, n_per_class=8, epochs=1,
+                                    batch_size=16, chunk_batches=2, iters=1,
+                                    out_dir=str(tmp_path))
+    on_disk = json.loads((tmp_path / "BENCH_map_phase_chunked.json")
+                         .read_text())
+    for key in ("monolithic_us", "chunked_us", "overhead", "bit_identical",
+                "chunk_batches", "epoch_bytes", "chunk_bytes", "peak_bytes"):
+        assert key in on_disk, key
+    assert payload["bit_identical"] is True
+    assert payload["peak_bytes"] == 2 * payload["chunk_bytes"]
+    assert payload["peak_bytes"] < payload["epoch_bytes"]

@@ -55,6 +55,22 @@ def test_member_dim_prepend():
     assert out == {"w": ("member", "embed", "ff")}
 
 
+def test_stacked_batch_shardings_member_axis():
+    """Scan-major batch arrays (nb, k, B, ...) shard the member dim (axis 1)
+    on 'pod' — the chunked host→device pipeline's placement — with the
+    usual replication fallback when k doesn't divide the pod count."""
+    mesh = jax.make_mesh((1,), ("pod",))
+    xb = jnp.zeros((4, 3, 8, 5, 5))
+    mb = jnp.zeros((4, 3))
+    out = sharding.stacked_batch_shardings((xb, mb), mesh)
+    assert out[0].spec == P(None, "pod", None, None, None)
+    assert out[1].spec == P(None, "pod")
+    # a mesh without a 'pod' axis replicates (the fallback contract)
+    mesh2 = jax.make_mesh((1,), ("data",))
+    out2 = sharding.stacked_batch_shardings((jnp.zeros((4, 5)),), mesh2)
+    assert out2[0].spec == P(None, None)
+
+
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_logical_tree_matches_param_tree(arch):
     """Every param leaf must have a logical spec of matching rank."""
