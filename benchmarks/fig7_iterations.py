@@ -8,6 +8,7 @@ import jax
 from benchmarks.common import emit, save_result, time_call
 from repro.configs.base import get_config
 from repro.core import cnn_elm
+from repro.core.runner import evaluate_model
 from repro.data.partition import partition_iid
 from repro.data.synthetic import make_extended_mnist
 from repro.models import cnn
@@ -30,7 +31,7 @@ def main():
         for e in range(0, 4):
             model = cnn_elm.train_member(cfg, init, part, epochs=e,
                                          lr_schedule=sched, batch_size=200)
-            accs.append(cnn_elm.evaluate(cfg, model, test.x, test.y))
+            accs.append(evaluate_model(cfg, model, test.x, test.y))
         curves[label] = accs
         emit(f"fig7_{label}", 0.0,
              ";".join(f"e{e}={a:.4f}" for e, a in enumerate(accs)))

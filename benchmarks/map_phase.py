@@ -5,19 +5,25 @@ The sequential reference dispatches 3 jit calls per batch per member from
 the host (feature/stats, β solve, SGD step); the stacked path trains all k
 members in one donated scan. The ratio is the host-dispatch overhead the
 paper's "embarrassingly parallel Map" leaves on the table when driven batch
-by batch from Python.
+by batch from Python. Both sides now run through the composable runner
+(``runner.AveragingRun``) — the benchmark times the API users actually
+call, and reads the dispatch counts straight from ``RunResult`` telemetry.
 
-Three configs, three JSONs under ``experiments/``:
+Four configs, four JSONs under ``experiments/``:
 
 * ``run``         → ``BENCH_map_phase.json`` — the equal-shard k=4 case
-  (sequential vs stacked; the PR-1 headline number, kept as the regression
-  floor).
+  (sequential vs stacked backend; the PR-1 headline number, kept as the
+  regression floor).
 * ``run_unequal`` → ``BENCH_map_phase_unequal.json`` — shards in a
   1:2:…:k size ratio; sequential + shard-weighted Reduce vs the
   padded/masked stacked path (the regime that used to hard-fail).
 * ``run_chunked`` → ``BENCH_map_phase_chunked.json`` — the monolithic
   one-scan epoch vs the double-buffered chunked scan, plus the device-bytes
   bound the chunking buys and a bit-identical β check.
+* ``run_rounds``  → ``BENCH_map_phase_rounds.json`` — single final average
+  (``rounds=1``) vs multi-round parallel-SGD averaging (``rounds=r``): the
+  wall-clock price of communicating every epochs/r epochs, with per-round
+  dispatch telemetry.
 
 Run standalone: ``PYTHONPATH=src python -m benchmarks.map_phase``
 (``--smoke`` for the tiny CI config; or via ``benchmarks/run.py``).
@@ -30,48 +36,50 @@ import jax
 
 from benchmarks.common import emit, save_result, time_call
 from repro.configs.base import get_reduced_config
-from repro.core import cnn_elm
+from repro.core.runner import AveragingRun, MapConfig, ReduceConfig
 from repro.data.partition import partition_iid, partition_unequal
 from repro.data.synthetic import make_extended_mnist
 from repro.models import cnn
 from repro.optim.schedules import dynamic_paper
 
+KEY = jax.random.PRNGKey(0)
+
 
 def _workload(n_per_class: int):
     cfg = get_reduced_config("cnn_elm_6c12c")
     ds = make_extended_mnist(n_per_class=n_per_class, seed=0)
-    init = cnn.init_params(cfg, jax.random.PRNGKey(0))
-    return cfg, ds, init, dynamic_paper(0.05)
+    return cfg, ds, dynamic_paper(0.05)
 
 
 def run(k: int = 4, n_per_class: int = 40, epochs: int = 2,
         batch_size: int = 32, iters: int = 3, out_dir: str = None):
-    """Time both Map-phase implementations on one equal-shard workload and
-    persist the comparison. Returns the payload dict."""
-    cfg, ds, init, lr = _workload(n_per_class)
+    """Time both Map-phase backends on one equal-shard workload and persist
+    the comparison. Returns the payload dict."""
+    cfg, ds, lr = _workload(n_per_class)
     parts = partition_iid(ds.x, ds.y, k=k, seed=0)
+    last = {}
 
-    def sequential():
-        members = [cnn_elm.train_member(cfg, init, p, epochs=epochs,
-                                        lr_schedule=lr,
-                                        batch_size=batch_size, seed=1000 + i)
-                   for i, p in enumerate(parts)]
-        return cnn_elm.average_models(members).beta
+    def backend_fn(backend):
+        runner = AveragingRun(cfg, MapConfig(
+            epochs=epochs, lr_schedule=lr, batch_size=batch_size,
+            backend=backend))
 
-    def stacked():
-        sm = cnn_elm.train_members_stacked(cfg, init, parts, epochs=epochs,
-                                           lr_schedule=lr,
-                                           batch_size=batch_size)
-        return sm.averaged().beta
+        def go():
+            res = runner.run(parts, KEY)
+            last[backend] = res.dispatches
+            return res.averaged.beta
+        return go
 
-    seq_us = time_call(sequential, warmup=1, iters=iters)
-    st_us = time_call(stacked, warmup=1, iters=iters)
+    seq_us = time_call(backend_fn("sequential"), warmup=1, iters=iters)
+    st_us = time_call(backend_fn("stacked"), warmup=1, iters=iters)
 
     num_batches = (len(parts[0].x) // batch_size)
     payload = {
         "sequential_us": seq_us,
         "stacked_us": st_us,
         "speedup": seq_us / st_us,
+        "sequential_dispatches": last["sequential"],
+        "stacked_dispatches": last["stacked"],
         "k": k,
         "epochs": epochs,
         "num_batches": num_batches,
@@ -80,9 +88,10 @@ def run(k: int = 4, n_per_class: int = 40, epochs: int = 2,
         "backend": jax.default_backend(),
     }
     save_result("BENCH_map_phase", payload, out_dir=out_dir)
-    emit(f"map_phase_sequential_k{k}_e{epochs}", seq_us, "host loop")
+    emit(f"map_phase_sequential_k{k}_e{epochs}", seq_us,
+         f"host loop {last['sequential']} dispatches")
     emit(f"map_phase_stacked_k{k}_e{epochs}", st_us,
-         f"vmap+scan {payload['speedup']:.1f}x")
+         f"vmap+scan {payload['speedup']:.1f}x {last['stacked']} dispatches")
     return payload
 
 
@@ -92,27 +101,21 @@ def run_unequal(k: int = 4, n_per_class: int = 40, epochs: int = 2,
     Reduce vs the padded/masked stacked path. Before this path existed the
     stacked Map phase raised on these shards and everything fell back to the
     sequential loop — ``speedup`` is what the masked scan claws back."""
-    cfg, ds, init, lr = _workload(n_per_class)
+    cfg, ds, lr = _workload(n_per_class)
     base = len(ds.x) // (k * (k + 1) // 2)
     sizes = [base * (i + 1) for i in range(k)]
     parts = partition_unequal(ds.x, ds.y, sizes, seed=0)
-    weights = [float(s) for s in sizes]
 
-    def sequential():
-        members = [cnn_elm.train_member(cfg, init, p, epochs=epochs,
-                                        lr_schedule=lr,
-                                        batch_size=batch_size, seed=1000 + i)
-                   for i, p in enumerate(parts)]
-        return cnn_elm.average_models(members, weights=weights).beta
+    def backend_fn(backend):
+        runner = AveragingRun(
+            cfg,
+            MapConfig(epochs=epochs, lr_schedule=lr, batch_size=batch_size,
+                      backend=backend),
+            ReduceConfig(strategy="shard_weighted"))
+        return lambda: runner.run(parts, KEY).averaged.beta
 
-    def stacked():
-        sm = cnn_elm.train_members_stacked(cfg, init, parts, epochs=epochs,
-                                           lr_schedule=lr,
-                                           batch_size=batch_size)
-        return cnn_elm.average_models(sm.unstack(), weights=weights).beta
-
-    seq_us = time_call(sequential, warmup=1, iters=iters)
-    st_us = time_call(stacked, warmup=1, iters=iters)
+    seq_us = time_call(backend_fn("sequential"), warmup=1, iters=iters)
+    st_us = time_call(backend_fn("stacked"), warmup=1, iters=iters)
 
     batch_counts = [len(p.x) // batch_size for p in parts]
     payload = {
@@ -145,7 +148,7 @@ def run_chunked(k: int = 4, n_per_class: int = 40, epochs: int = 2,
     one scanning plus the one in flight (``peak_bytes`` vs
     ``epoch_bytes``) — at the cost of one dispatch per chunk; the two must
     be bit-identical (asserted here, not just tested)."""
-    cfg, ds, init, lr = _workload(n_per_class)
+    cfg, ds, lr = _workload(n_per_class)
     parts = partition_iid(ds.x, ds.y, k=k, seed=0)
     nb = len(parts[0].x) // batch_size
     if not 0 < chunk_batches < nb:
@@ -155,20 +158,19 @@ def run_chunked(k: int = 4, n_per_class: int = 40, epochs: int = 2,
             f"monolithic path")
     last = {}  # beta from the most recent timed run (deterministic per path)
 
-    def monolithic():
-        last["mono"] = cnn_elm.train_members_stacked(
-            cfg, init, parts, epochs=epochs, lr_schedule=lr,
-            batch_size=batch_size).beta
-        return last["mono"]
+    def variant(name, chunk):
+        runner = AveragingRun(cfg, MapConfig(
+            epochs=epochs, lr_schedule=lr, batch_size=batch_size,
+            backend="stacked", chunk_batches=chunk))
 
-    def chunked():
-        last["chunked"] = cnn_elm.train_members_stacked(
-            cfg, init, parts, epochs=epochs, lr_schedule=lr,
-            batch_size=batch_size, chunk_batches=chunk_batches).beta
-        return last["chunked"]
+        def go():
+            last[name] = runner.run(parts, KEY).stacked.beta
+            return last[name]
+        return go
 
-    mono_us = time_call(monolithic, warmup=1, iters=iters)
-    chk_us = time_call(chunked, warmup=1, iters=iters)
+    mono_us = time_call(variant("mono", None), warmup=1, iters=iters)
+    chk_us = time_call(variant("chunked", chunk_batches), warmup=1,
+                       iters=iters)
     identical = bool(np.array_equal(np.asarray(last["mono"]),
                                     np.asarray(last["chunked"])))
 
@@ -198,6 +200,63 @@ def run_chunked(k: int = 4, n_per_class: int = 40, epochs: int = 2,
     return payload
 
 
+def run_rounds(k: int = 4, n_per_class: int = 40, epochs: int = 4,
+               batch_size: int = 32, rounds: int = 4, iters: int = 3,
+               out_dir: str = None):
+    """Single final average (``rounds=1``) vs multi-round parallel-SGD
+    averaging (``rounds=r``, one sync every epochs/r epochs) on the stacked
+    backend. ``sync_overhead`` is the wall-clock price of the extra
+    averaging events; ``round_dispatches`` comes from ``RunResult``'s
+    per-round telemetry."""
+    if rounds < 2:
+        raise ValueError(f"rounds={rounds} would benchmark the single-"
+                         f"average config against itself; use rounds >= 2")
+    if epochs % rounds:
+        raise ValueError(f"epochs ({epochs}) must split into rounds "
+                         f"({rounds})")
+    cfg, ds, lr = _workload(n_per_class)
+    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
+    last = {}
+
+    def variant(r):
+        runner = AveragingRun(
+            cfg,
+            MapConfig(epochs=epochs, lr_schedule=lr, batch_size=batch_size,
+                      backend="stacked"),
+            ReduceConfig(rounds=r))
+
+        def go():
+            last[r] = runner.run(parts, KEY)
+            return last[r].averaged.beta
+        return go
+
+    single_us = time_call(variant(1), warmup=1, iters=iters)
+    multi_us = time_call(variant(rounds), warmup=1, iters=iters)
+    res = last[rounds]
+
+    payload = {
+        "single_round_us": single_us,
+        "multi_round_us": multi_us,
+        "sync_overhead": multi_us / single_us,
+        "k": k,
+        "epochs": epochs,
+        "rounds": rounds,
+        "epochs_per_round": epochs // rounds,
+        "round_dispatches": [r.dispatches for r in res.rounds],
+        "round_sync_dispatches": res.round_syncs,
+        "total_dispatches": res.dispatches,
+        "batch_size": batch_size,
+        "backend": jax.default_backend(),
+    }
+    save_result("BENCH_map_phase_rounds", payload, out_dir=out_dir)
+    emit(f"map_phase_rounds1_k{k}_e{epochs}", single_us,
+         "single final average")
+    emit(f"map_phase_rounds{rounds}_k{k}_e{epochs}", multi_us,
+         f"sync every {epochs // rounds} epochs "
+         f"{payload['sync_overhead']:.2f}x")
+    return payload
+
+
 def main(smoke: bool = False):
     kw = {}
     if smoke:
@@ -210,6 +269,9 @@ def main(smoke: bool = False):
     run(**kw)
     run_unequal(**kw)
     run_chunked(chunk_batches=2, **kw)
+    # rounds needs epochs divisible by rounds; the smoke tier runs the
+    # smallest multi-round config (2 epochs, sync after epoch 1)
+    run_rounds(rounds=2, **{**kw, "epochs": 2}) if smoke else run_rounds()
 
 
 if __name__ == "__main__":

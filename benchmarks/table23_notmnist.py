@@ -9,13 +9,13 @@ Claims under test (synthetic analogue):
 """
 from __future__ import annotations
 
-import time
-
 import jax
 
 from benchmarks.common import emit, save_result
 from repro.configs.base import get_config
 from repro.core import cnn_elm
+from repro.core.runner import (AveragingRun, MapConfig, ReduceConfig,
+                               evaluate_model)
 from repro.data.partition import partition_by_class, partition_iid
 from repro.data.synthetic import make_not_mnist
 from repro.models import cnn
@@ -35,19 +35,20 @@ def run(epochs: int):
         cfg, cnn.init_params(cfg, key),
         partition_iid(train.x, train.y, 1)[0], epochs=epochs,
         lr_schedule=dynamic_paper(0.05), batch_size=BATCH)
-    res = {"monolithic": cnn_elm.evaluate(cfg, mono, test.x, test.y)}
+    res = {"monolithic": evaluate_model(cfg, mono, test.x, test.y)}
 
     for k in (2, 5):
         parts = partition_by_class(train.x, train.y, k)
-        t0 = time.perf_counter()
-        members, avg = cnn_elm.distributed_cnn_elm(
-            cfg, parts, key, epochs=epochs,
-            lr_schedule=dynamic_paper(0.05), batch_size=BATCH)
-        dt = time.perf_counter() - t0
-        for i, m in enumerate(members):
-            res[f"member_{i+1}_of_{k}"] = cnn_elm.evaluate(cfg, m, test.x, test.y)
-        res[f"average_{k}"] = cnn_elm.evaluate(cfg, avg, test.x, test.y)
-        res[f"t_total_{k}_s"] = dt
+        rr = AveragingRun(
+            cfg,
+            MapConfig(epochs=epochs, lr_schedule=dynamic_paper(0.05),
+                      batch_size=BATCH, backend="sequential"),
+            ReduceConfig()).run(parts, key)
+        # every member scored in one batched ensemble pass
+        for i, a in enumerate(rr.ensemble().evaluate(test.x, test.y)):
+            res[f"member_{i+1}_of_{k}"] = float(a)
+        res[f"average_{k}"] = evaluate_model(cfg, rr.averaged, test.x, test.y)
+        res[f"t_total_{k}_s"] = rr.wall_time_s
     return res
 
 

@@ -29,14 +29,16 @@ def main():
                          "paper's not-MNIST degradation at LM scale")
     args = ap.parse_args()
 
+    # the rounds contract (runner.ReduceConfig(rounds=r) at CNN-ELM scale):
+    # 4 averaging events spread over the run == --avg-period steps/4
     if args.full:
         argv = ["--preset", "lm100m", "--steps", "200", "--members", "2",
-                "--batch", "8", "--seq", "512", "--avg-period", "50",
+                "--batch", "8", "--seq", "512", "--rounds", "4",
                 "--log-every", "10"]
     else:
         argv = ["--arch", "qwen3_8b", "--reduced", "--steps", "40",
                 "--members", "2", "--batch", "4", "--seq", "128",
-                "--avg-period", "10", "--log-every", "5"]
+                "--rounds", "4", "--log-every", "5"]
     if args.non_iid:
         argv.append("--non-iid")
 

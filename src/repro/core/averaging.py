@@ -43,10 +43,22 @@ def weighted_average_trees(members: Sequence, weights: Sequence[float]):
     return jax.tree.map(lambda a, r: a.astype(r.dtype), out, ref)
 
 
-def average_member_dim(stacked_params):
-    """Mean over the leading member dim of every leaf (multi-pod Reduce)."""
+def average_member_dim(stacked_params, weights=None):
+    """Mean over the leading member dim of every leaf (multi-pod Reduce).
+
+    Optional ``weights`` (length k, any positive scale — normalised here)
+    give the weighted mean, the member-dim analogue of
+    ``weighted_average_trees``; accumulation is f32 either way. This is the
+    Reduce applied both at the end of a run and at every multi-round sync
+    (``trainer.make_average_step`` / ``runner.ReduceConfig(rounds=r)``)."""
+    if weights is None:
+        return jax.tree.map(
+            lambda a: jnp.mean(a.astype(jnp.float32), axis=0).astype(a.dtype),
+            stacked_params)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
     return jax.tree.map(
-        lambda a: jnp.mean(a.astype(jnp.float32), axis=0).astype(a.dtype),
+        lambda a: jnp.tensordot(w, a.astype(jnp.float32), axes=1).astype(a.dtype),
         stacked_params)
 
 

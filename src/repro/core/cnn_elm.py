@@ -40,12 +40,19 @@ Both paths reshuffle per epoch from one rng stream per member (epoch e =
 the (e+1)-th permutation of ``default_rng(seed)`` — see
 ``data.partition``), replacing the earlier replay-the-same-permutation
 behaviour.
+
+This module is the ENGINE; the supported entry point is
+``repro.core.runner`` (``MapConfig``/``ReduceConfig``/``AveragingRun`` +
+the batched ``Ensemble`` scoring surface — docs/api.md). The old
+``distributed_cnn_elm``/``evaluate``/``kappa`` entries below are
+deprecation shims forwarding there.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +76,13 @@ class CNNELMModel:
     beta: jax.Array          # (F, C)
 
 
+def _bump(telemetry: Optional[dict], key: str = "dispatches", n: int = 1):
+    """Count device dispatches into the caller's telemetry dict (runner
+    RunResult bookkeeping). ``None`` keeps the engine overhead-free."""
+    if telemetry is not None:
+        telemetry[key] = telemetry.get(key, 0) + n
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
 def _batch_stats(cfg, cnn_params, x, t, *, use_pallas: Optional[bool] = None):
     h = cnn.features(cfg, cnn_params, x, use_pallas=use_pallas)
@@ -88,18 +102,15 @@ def _sgd_step(cfg, cnn_params, beta, x, t, lr, *,
     return new, val
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
-def _scores(cfg, cnn_params, beta, x, *, use_pallas: Optional[bool] = None):
-    h = cnn.features(cfg, cnn_params, x, use_pallas=use_pallas)
-    return elm.predict(h, beta)
-
-
 def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
                  lr_schedule, batch_size: int, seed: int = 0,
-                 use_pallas: Optional[bool] = None) -> CNNELMModel:
+                 use_pallas: Optional[bool] = None,
+                 telemetry: Optional[dict] = None) -> CNNELMModel:
     """Algorithm 2 inner loop for one machine. epochs=0 -> ELM-only pass.
     Epoch e draws the (e+1)-th permutation of ``default_rng(seed)`` — a
-    fresh shuffle every epoch, mirrored exactly by the stacked path."""
+    fresh shuffle every epoch, mirrored exactly by the stacked path.
+    ``telemetry`` counts the host→device jit dispatches this loop issues
+    (3 per batch with SGD: stats, β solve, SGD step)."""
     F = cnn.feature_dim(cfg)
     C = cfg.num_classes
     use_pallas = resolve_use_pallas(use_pallas)
@@ -116,20 +127,24 @@ def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
             xj = jnp.asarray(x)
             stats = elm.add_stats(stats, _batch_stats(cfg, params, xj, t,
                                                       use_pallas=use_pallas))
+            _bump(telemetry)
             if solve_each_batch:
                 beta = elm.solve_beta(stats, cfg.elm_lambda)
                 params, _ = _sgd_step(cfg, params, beta, xj, t,
                                       jnp.asarray(lr, jnp.float32),
                                       use_pallas=use_pallas)
+                _bump(telemetry, n=2)
         return params, stats
 
     if epochs == 0:
         cnn_params, stats = one_pass(cnn_params, False, None)
+        _bump(telemetry)
         return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
 
     stats = None
     for e in range(epochs):
         cnn_params, stats = one_pass(cnn_params, True, float(lr_schedule(e)))
+    _bump(telemetry)
     return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
 
 
@@ -206,6 +221,18 @@ def _stacked_epoch(cfg, params_k, stats_k, xb, tb, mb, lr, *,
     return params_k, stats_k
 
 
+@jax.jit
+def _round_sync(params_k, weights):
+    """The inter-round sync as ONE fused device program: (weighted) mean
+    over the member dim, broadcast back as every member's next-round init —
+    the same step ``trainer.make_average_step`` builds for the multi-pod
+    mesh (one all-reduce when the member dim is sharded). Jitted so the
+    telemetry's one-dispatch-per-sync accounting is literal."""
+    k = jax.tree.leaves(params_k)[0].shape[0]
+    return broadcast_member_dim(
+        average_member_dim(params_k, weights=weights), k)
+
+
 def _epoch_scan_arrays(partitions, batch_size, rngs, num_classes,
                        chunk_batches):
     """Scan-major padded epoch arrays on the HOST: xb (nb, k, B, ...),
@@ -243,7 +270,11 @@ def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
                           seed_base: int = 1000,
                           use_pallas: Optional[bool] = None,
                           mesh=None,
-                          chunk_batches: Optional[int] = None) -> StackedMembers:
+                          chunk_batches: Optional[int] = None,
+                          rounds: int = 1,
+                          round_weights: Optional[Sequence[float]] = None,
+                          on_round: Optional[Callable] = None,
+                          telemetry: Optional[dict] = None) -> StackedMembers:
     """Algorithm 2 Map phase, vectorised: k members trained as one stacked
     program. Matches ``train_member(..., seed=seed_base + i)`` per member
     (same init, same per-epoch batch order, same update sequence) for ANY
@@ -254,9 +285,33 @@ def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
     bit-identical to the monolithic scan. ``mesh`` optionally places the
     member dim on the 'pod' mesh axis (see
     ``sharding.member_dim_shardings``); the scan then runs SPMD across
-    pods."""
+    pods.
+
+    ``rounds`` is the multi-round (parallel-SGD) contract: the ``epochs``
+    SGD epochs split into ``rounds`` contiguous blocks and after every
+    non-final block the members are synchronised to
+    ``broadcast_member_dim(average_member_dim(params, round_weights), k)``
+    — the same step ``trainer.make_average_step`` lowers for the multi-pod
+    mesh. ``rounds=1`` is the paper's single final average and is
+    bit-identical to the pre-rounds behaviour. The per-member rng streams
+    and the lr schedule run over GLOBAL epoch indices, uninterrupted by
+    round boundaries. ``on_round(r, snapshot)`` is called after each
+    round's epochs AND its sync bookkeeping with the round index and a
+    cached zero-arg ``snapshot()`` returning the pre-sync
+    ``StackedMembers`` (β solved from that round's final-epoch stats on
+    first call — rounds whose snapshot is never taken skip the Cholesky);
+    ``telemetry`` counts scan dispatches / β solves / round syncs, with
+    each round's sync attributed to that round."""
     if chunk_batches is not None and chunk_batches < 1:
         raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    if rounds > 1 and epochs == 0:
+        raise ValueError("rounds > 1 needs SGD epochs to interleave with "
+                         "averaging; epochs=0 is the single closed-form pass")
+    if rounds > 1 and epochs % rounds:
+        raise ValueError(f"epochs ({epochs}) must split evenly into rounds "
+                         f"({rounds})")
     k = len(partitions)
     F, C = cnn.feature_dim(cfg), cfg.num_classes
     use_pallas = resolve_use_pallas(use_pallas)
@@ -269,28 +324,63 @@ def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
         params_k = jax.device_put(
             params_k, sharding.member_dim_shardings(params_k, mesh))
 
-    passes = [(False, 0.0)] if epochs == 0 else [
-        (True, float(lr_schedule(e))) for e in range(epochs)]
-    stats_k = None
-    for solve_each_batch, lr in passes:
-        xb, tb, mb, chunk = _epoch_scan_arrays(partitions, batch_size, rngs,
-                                               C, chunk_batches)
-        masked = bool(np.any(mb == 0.0))
-        stats_k = elm.zero_stats_stacked(k, F, C)
-        if mesh is not None:
-            stats_k = jax.device_put(
-                stats_k, sharding.member_dim_shardings(stats_k, mesh))
-        chunks = chunk_scan_major((xb, tb, mb), chunk)
-        lr_dev = jnp.asarray(lr, jnp.float32)
-        nxt = _put_chunk(chunks[0], mesh)
-        for i in range(len(chunks)):
-            cur, nxt = nxt, (_put_chunk(chunks[i + 1], mesh)
-                             if i + 1 < len(chunks) else None)
-            params_k, stats_k = _stacked_epoch(
-                cfg, params_k, stats_k, *cur, lr_dev,
-                solve_each_batch=solve_each_batch, use_pallas=use_pallas,
-                masked=masked)
-    return StackedMembers(params_k, elm.solve_beta(stats_k, cfg.elm_lambda))
+    per_round = epochs // rounds
+    round_passes = [[(False, 0.0)]] if epochs == 0 else [
+        [(True, float(lr_schedule(r * per_round + e)))
+         for e in range(per_round)] for r in range(rounds)]
+    sm = None
+    for r, passes in enumerate(round_passes):
+        stats_k = None
+        for solve_each_batch, lr in passes:
+            xb, tb, mb, chunk = _epoch_scan_arrays(partitions, batch_size,
+                                                   rngs, C, chunk_batches)
+            masked = bool(np.any(mb == 0.0))
+            stats_k = elm.zero_stats_stacked(k, F, C)
+            if mesh is not None:
+                stats_k = jax.device_put(
+                    stats_k, sharding.member_dim_shardings(stats_k, mesh))
+            chunks = chunk_scan_major((xb, tb, mb), chunk)
+            lr_dev = jnp.asarray(lr, jnp.float32)
+            nxt = _put_chunk(chunks[0], mesh)
+            for i in range(len(chunks)):
+                cur, nxt = nxt, (_put_chunk(chunks[i + 1], mesh)
+                                 if i + 1 < len(chunks) else None)
+                params_k, stats_k = _stacked_epoch(
+                    cfg, params_k, stats_k, *cur, lr_dev,
+                    solve_each_batch=solve_each_batch, use_pallas=use_pallas,
+                    masked=masked)
+                _bump(telemetry)
+        last = r == len(round_passes) - 1
+
+        def snapshot(pk=params_k, sk=stats_k, cache={}):
+            # lazy + cached: the batched Cholesky solve only runs for
+            # rounds whose snapshot somebody actually takes (the final
+            # round always; intermediate ones only under a hook). The
+            # default args pin this round's pre-sync state.
+            if "sm" not in cache:
+                _bump(telemetry)
+                cache["sm"] = StackedMembers(
+                    pk, elm.solve_beta(sk, cfg.elm_lambda))
+            return cache["sm"]
+
+        if last:
+            sm = snapshot()
+        else:
+            params_k = _round_sync(
+                params_k,
+                None if round_weights is None
+                else jnp.asarray(round_weights, jnp.float32))
+            if mesh is not None:
+                params_k = jax.device_put(
+                    params_k, sharding.member_dim_shardings(params_k, mesh))
+            # the sync is a device dispatch too — counted toward the total
+            # AND tallied separately, before on_round closes this round's
+            # books, so per-round telemetry prices each round's own sync
+            _bump(telemetry)
+            _bump(telemetry, key="round_syncs")
+        if on_round is not None:
+            on_round(r, snapshot)
+    return sm
 
 
 def average_models(models: Sequence[CNNELMModel],
@@ -316,64 +406,50 @@ def distributed_cnn_elm(cfg, partitions: List[Partition], key, *,
                         use_pallas: Optional[bool] = None,
                         mesh=None, weight_by_shard: bool = False,
                         chunk_batches: Optional[int] = None):
-    """Full Algorithm 2: same init for all machines (line 3), independent
-    training (Map), weight averaging (Reduce). Returns (members, averaged).
+    """DEPRECATED shim — use ``repro.core.runner.AveragingRun``.
 
-    ``stacked=True`` runs the vmap+scan fast path for ANY partition sizes
-    (unequal shards are padded + masked); ``chunk_batches`` streams the
-    epoch as double-buffered host→device chunks to bound device memory;
-    ``weight_by_shard=True`` weights the Reduce by shard size for unequal
-    partitions on either path."""
-    init = cnn.init_params(cfg, key)
-    weights = [len(p.x) for p in partitions] if weight_by_shard else None
-    if stacked:
-        sm = train_members_stacked(cfg, init, partitions, epochs=epochs,
-                                   lr_schedule=lr_schedule,
-                                   batch_size=batch_size,
-                                   use_pallas=use_pallas, mesh=mesh,
-                                   chunk_batches=chunk_batches)
-        members = sm.unstack()
-        return members, (average_models(members, weights=weights)
-                         if weights is not None else sm.averaged())
-    members = [train_member(cfg, init, part, epochs=epochs,
-                            lr_schedule=lr_schedule, batch_size=batch_size,
-                            seed=1000 + i, use_pallas=use_pallas)
-               for i, part in enumerate(partitions)]
-    return members, average_models(members, weights=weights)
+    The 8-kwarg entry point is preserved verbatim for old callers; it
+    forwards to the composable runner (``MapConfig`` carries the Map
+    concerns, ``ReduceConfig`` the Reduce strategy) and returns the same
+    ``(members, averaged)`` pair, same numerics, same seeds."""
+    warnings.warn(
+        "distributed_cnn_elm is deprecated; use repro.core.runner."
+        "AveragingRun(cfg, MapConfig(...), ReduceConfig(...)).run(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.core import runner
+    res = runner.AveragingRun(
+        cfg,
+        runner.MapConfig(epochs=epochs, lr_schedule=lr_schedule,
+                         batch_size=batch_size,
+                         backend="stacked" if stacked else "sequential",
+                         use_pallas=use_pallas, mesh=mesh,
+                         chunk_batches=chunk_batches),
+        runner.ReduceConfig(
+            strategy="shard_weighted" if weight_by_shard else "uniform"),
+    ).run(partitions, key)
+    return res.members, res.averaged
 
 
 def evaluate(cfg, model: CNNELMModel, x: np.ndarray, y: np.ndarray,
              batch_size: int = 512,
              use_pallas: Optional[bool] = None) -> float:
-    """Accuracy. ``use_pallas`` resolves per call (None = auto policy), so
-    callers can force the eval backend and REPRO_USE_PALLAS flips are not
-    baked into the first trace."""
-    use_pallas = resolve_use_pallas(use_pallas)
-    correct, total = 0, 0
-    for i in range(0, len(x), batch_size):
-        s = _scores(cfg, model.cnn_params, model.beta,
-                    jnp.asarray(x[i:i + batch_size]), use_pallas=use_pallas)
-        correct += int(jnp.sum(jnp.argmax(s, -1) == jnp.asarray(y[i:i + batch_size])))
-        total += len(y[i:i + batch_size])
-    return correct / total
+    """DEPRECATED shim — use ``repro.core.runner.evaluate_model`` (or an
+    ``Ensemble`` for many models: one batched dispatch per eval batch)."""
+    warnings.warn("cnn_elm.evaluate is deprecated; use repro.core.runner."
+                  "evaluate_model or runner.Ensemble.evaluate",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core import runner
+    return runner.evaluate_model(cfg, model, x, y, batch_size=batch_size,
+                                 use_pallas=use_pallas)
 
 
 def kappa(cfg, model: CNNELMModel, x, y, batch_size: int = 512,
           use_pallas: Optional[bool] = None):
-    """Cohen's kappa (the paper's secondary metric, Table 1c). Backend
-    resolution matches ``evaluate``."""
-    use_pallas = resolve_use_pallas(use_pallas)
-    preds = []
-    for i in range(0, len(x), batch_size):
-        s = _scores(cfg, model.cnn_params, model.beta,
-                    jnp.asarray(x[i:i + batch_size]), use_pallas=use_pallas)
-        preds.append(np.asarray(jnp.argmax(s, -1)))
-    p = np.concatenate(preds)
-    C = cfg.num_classes
-    cm = np.zeros((C, C))
-    for a, b in zip(y, p):
-        cm[a, b] += 1
-    n = cm.sum()
-    po = np.trace(cm) / n
-    pe = float((cm.sum(0) * cm.sum(1)).sum()) / (n * n)
-    return (po - pe) / (1 - pe + 1e-12)
+    """DEPRECATED shim — use ``repro.core.runner.kappa_model`` (or an
+    ``Ensemble`` for many models)."""
+    warnings.warn("cnn_elm.kappa is deprecated; use repro.core.runner."
+                  "kappa_model or runner.Ensemble.kappa",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core import runner
+    return runner.kappa_model(cfg, model, x, y, batch_size=batch_size,
+                              use_pallas=use_pallas)

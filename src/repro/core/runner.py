@@ -1,0 +1,459 @@
+"""Composable MapReduce runner — the paper's Algorithm 2 as explicit
+config objects instead of one 8-kwarg entry point.
+
+* ``MapConfig``    — everything the Map phase needs: epochs, lr schedule,
+                     batch size, backend (``"sequential"`` host loop or the
+                     ``"stacked"`` vmap+scan fast path), kernel backend,
+                     mesh placement, chunking, and THE member seed rule.
+* ``ReduceConfig`` — the Reduce strategy (uniform / shard-weighted /
+                     explicit weights) and ``rounds``: ``rounds > 1``
+                     interleaves Map epochs with
+                     ``broadcast_member_dim(average_member_dim(...))`` —
+                     the parallel-SGD regime (MapReduce-based Deep
+                     Learning, arXiv:1510.02709); ``rounds = 1`` is the
+                     paper's single final average.
+* ``AveragingRun`` — binds a model config to the two phase configs;
+                     ``.run(partitions, key)`` returns a ``RunResult`` with
+                     members, the averaged model, per-round records
+                     (wall-time, dispatch counts, eval-hook results) and
+                     whole-run telemetry.
+* ``Ensemble``     — batched serving surface over ``StackedMembers``:
+                     k models scored in ONE vmap dispatch per eval batch,
+                     with ``"mean"`` (mean-score) and ``"vote"`` (majority)
+                     combination modes, per-member ``evaluate``/``kappa``,
+                     and the vectorised confusion-matrix kappa.
+
+Seed rule (shared by BOTH backends): member ``i`` draws its per-epoch batch
+permutations from ``np.random.default_rng(MapConfig.seed + i)`` — see
+``MapConfig.member_seed``. This replaces the sequential path's hardcoded
+``1000 + i`` and the stacked path's ``seed_base`` with one documented rule,
+so backend equivalence is by-construction (``MapConfig.seed`` defaults to
+the historical 1000).
+
+``cnn_elm.distributed_cnn_elm`` / ``evaluate`` / ``kappa`` survive as thin
+deprecation shims forwarding here.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cnn_elm, elm
+from repro.core.averaging import average_member_dim
+from repro.core.cnn_elm import CNNELMModel, StackedMembers
+from repro.data.partition import Partition
+from repro.kernels import resolve_use_pallas
+from repro.models import cnn
+
+BACKENDS = ("sequential", "stacked")
+STRATEGIES = ("uniform", "shard_weighted")
+COMBINES = ("mean", "vote")
+
+
+# ---------------------------------------------------------------------------
+# Phase configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MapConfig:
+    """Map-phase configuration (Alg. 2 lines 4-17, one member per shard).
+
+    ``backend="sequential"`` is the faithful host-loop reference
+    (``cnn_elm.train_member`` per member, 3 dispatches per batch);
+    ``"stacked"`` is the production path (all members vmapped into one
+    donated scan per epoch chunk). ``use_pallas`` forces the kernel backend
+    on EITHER path (None = auto policy); ``mesh``/``chunk_batches`` only
+    affect the stacked backend, matching the engine they configure."""
+    epochs: int = 0
+    lr_schedule: Optional[Callable[[int], float]] = None
+    batch_size: int = 32
+    backend: str = "stacked"
+    use_pallas: Optional[bool] = None
+    mesh: Any = None
+    chunk_batches: Optional[int] = None
+    seed: int = 1000
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.epochs < 0:
+            raise ValueError(f"epochs must be >= 0, got {self.epochs}")
+        if self.epochs > 0 and self.lr_schedule is None:
+            raise ValueError("epochs > 0 needs an lr_schedule "
+                             "(e.g. optim.schedules.dynamic_paper)")
+
+    def member_seed(self, i: int) -> int:
+        """THE seed rule: member i's rng stream is
+        ``default_rng(seed + i)``; epoch e's batch order is that stream's
+        (e+1)-th permutation. Both backends derive from this rule, so their
+        equivalence is by-construction."""
+        return self.seed + i
+
+
+@dataclass(frozen=True)
+class ReduceConfig:
+    """Reduce-phase configuration (Alg. 2 lines 18-20 + beyond-paper knobs).
+
+    ``strategy`` — ``"uniform"`` (the paper's mean), ``"shard_weighted"``
+    (weights = shard row counts: the exact expectation over unequal
+    partitions), or an explicit per-member weight sequence.
+
+    ``rounds`` — how many averaging events the run's epochs split into.
+    ``rounds=1``: train all epochs, average once (paper-faithful).
+    ``rounds=r>1``: epochs split into r contiguous blocks; after every
+    non-final block the members sync to the (weighted) average — stacked
+    backend only, where the sync is one ``average_member_dim`` +
+    ``broadcast_member_dim`` (a single cross-pod all-reduce on a mesh)."""
+    strategy: Union[str, Sequence[float]] = "uniform"
+    rounds: int = 1
+
+    def __post_init__(self):
+        if isinstance(self.strategy, str) and self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES} or an "
+                             f"explicit weight sequence, got {self.strategy!r}")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+
+    def resolve_weights(self, partitions: Sequence[Partition]
+                        ) -> Optional[List[float]]:
+        """None for uniform, shard row counts, or the explicit weights."""
+        if isinstance(self.strategy, str):
+            if self.strategy == "uniform":
+                return None
+            return [float(len(p.x)) for p in partitions]
+        w = [float(v) for v in self.strategy]
+        if len(w) != len(partitions):
+            raise ValueError(f"{len(w)} explicit weights for "
+                             f"{len(partitions)} partitions")
+        return w
+
+
+# ---------------------------------------------------------------------------
+# Run result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RoundRecord:
+    """Telemetry for one averaging round: the global epoch span it covered,
+    its wall time, how many device dispatches it issued, and whatever the
+    caller's ``round_hook(round, averaged)`` returned (None without one)."""
+    round: int
+    epoch_start: int
+    epoch_end: int
+    wall_time_s: float
+    dispatches: int
+    hook: Any = None
+
+
+@dataclass
+class RunResult:
+    """Everything a Map/Reduce run produced. ``stacked`` is the live
+    ``StackedMembers`` on the stacked backend (None on sequential);
+    ``rounds`` has one ``RoundRecord`` per averaging round; ``dispatches``
+    counts jit round-trips the Map engine issued (the stacked/sequential
+    ratio is exactly the dispatch saving docs/perf.md describes)."""
+    cfg: Any
+    members: List[CNNELMModel]
+    averaged: CNNELMModel
+    stacked: Optional[StackedMembers]
+    rounds: List[RoundRecord]
+    wall_time_s: float
+    dispatches: int
+    backend: str
+    round_syncs: int = 0     # inter-round average+broadcast dispatches
+                             # (rounds - 1 on the stacked backend)
+
+    def ensemble(self, combine: str = "mean") -> "Ensemble":
+        """The k members as a batched scoring surface."""
+        if self.stacked is not None:
+            return Ensemble(self.cfg, self.stacked, combine=combine)
+        return Ensemble.from_models(self.cfg, self.members, combine=combine)
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AveragingRun:
+    """One distributed-averaging experiment: model config + Map config +
+    Reduce config. ``run(partitions, key)`` executes Algorithm 2 (init once,
+    Map every shard, Reduce by averaging — ``rounds`` times)."""
+    cfg: Any
+    map_cfg: MapConfig = field(default_factory=MapConfig)
+    reduce_cfg: ReduceConfig = field(default_factory=ReduceConfig)
+
+    def run(self, partitions: Sequence[Partition], key, *,
+            round_hook: Optional[Callable[[int, CNNELMModel], Any]] = None
+            ) -> RunResult:
+        """``round_hook(r, averaged)`` (optional) is evaluated after every
+        round's Reduce with the round index and that round's averaged model;
+        its return value lands in ``RunResult.rounds[r].hook`` — the
+        per-round eval surface (accuracy curves across communication
+        rounds, early stopping, checkpointing, ...)."""
+        m, rc = self.map_cfg, self.reduce_cfg
+        if rc.rounds > 1 and m.backend != "stacked":
+            raise ValueError("rounds > 1 requires MapConfig("
+                             "backend='stacked') — the sequential reference "
+                             "has no sync point between members")
+        weights = rc.resolve_weights(partitions)
+        init = cnn.init_params(self.cfg, key)
+        telemetry: dict = {"dispatches": 0}
+        records: List[RoundRecord] = []
+        t0 = time.perf_counter()
+
+        if m.backend == "sequential":
+            members = [cnn_elm.train_member(
+                self.cfg, init, p, epochs=m.epochs,
+                lr_schedule=m.lr_schedule, batch_size=m.batch_size,
+                seed=m.member_seed(i), use_pallas=m.use_pallas,
+                telemetry=telemetry) for i, p in enumerate(partitions)]
+            averaged = cnn_elm.average_models(members, weights=weights)
+            # hook runs before the wall-time capture, matching the stacked
+            # backend's per-round accounting
+            hooked = round_hook(0, averaged) if round_hook else None
+            records.append(RoundRecord(
+                0, 0, m.epochs, time.perf_counter() - t0,
+                telemetry["dispatches"], hooked))
+            return RunResult(self.cfg, members, averaged, None, records,
+                             time.perf_counter() - t0,
+                             telemetry["dispatches"], m.backend)
+
+        per_round = m.epochs // rc.rounds
+        state = {"t": t0, "d": 0, "avg": None}
+
+        def on_round(r: int, snapshot):
+            # per-round Reduce on the stacked layout — the SAME
+            # average_member_dim(weights) the engine's inter-round sync
+            # applies, so the hook's averaged model is the model members
+            # were actually reset to (one all-reduce under a mesh).
+            # ``snapshot`` is lazy, so hook-less intermediate rounds never
+            # pay the β solve or the averaged-model build.
+            hooked = None
+            if round_hook is not None or r == rc.rounds - 1:
+                sm_r = snapshot()
+                avg_cnn, avg_beta = average_member_dim(
+                    (sm_r.cnn_params, sm_r.beta), weights=weights)
+                averaged_r = CNNELMModel(avg_cnn, avg_beta)
+                state["avg"] = averaged_r
+                if round_hook is not None:
+                    hooked = round_hook(r, averaged_r)
+            now = time.perf_counter()
+            records.append(RoundRecord(
+                r, r * per_round, (r + 1) * per_round if m.epochs else 0,
+                now - state["t"], telemetry["dispatches"] - state["d"],
+                hooked))
+            state["t"], state["d"] = now, telemetry["dispatches"]
+
+        sm = cnn_elm.train_members_stacked(
+            self.cfg, init, partitions, epochs=m.epochs,
+            lr_schedule=m.lr_schedule, batch_size=m.batch_size,
+            seed_base=m.seed, use_pallas=m.use_pallas, mesh=m.mesh,
+            chunk_batches=m.chunk_batches, rounds=rc.rounds,
+            round_weights=weights, on_round=on_round, telemetry=telemetry)
+        return RunResult(self.cfg, sm.unstack(), state["avg"], sm, records,
+                         time.perf_counter() - t0, telemetry["dispatches"],
+                         m.backend, telemetry.get("round_syncs", 0))
+
+
+# ---------------------------------------------------------------------------
+# Batched ensemble scoring
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _scores_stacked(cfg, cnn_params_k, beta_k, x, *,
+                    use_pallas: Optional[bool] = None):
+    """ELM scores of ONE eval batch under ALL k members — a single device
+    dispatch (vmap over the member dim) instead of k host round-trips."""
+    def one(p, b):
+        h = cnn.features(cfg, p, x, use_pallas=use_pallas)
+        return elm.predict(h, b)
+
+    return jax.vmap(one)(cnn_params_k, beta_k)
+
+
+def confusion_matrix(y, preds, num_classes: int) -> np.ndarray:
+    """(C, C) confusion matrix via one ``np.add.at`` scatter — O(n) numpy,
+    no interpreter loop over samples. Rows = true label, cols = predicted."""
+    cm = np.zeros((num_classes, num_classes), np.int64)
+    np.add.at(cm, (np.asarray(y, np.int64), np.asarray(preds, np.int64)), 1)
+    return cm
+
+
+def kappa_from_confusion(cm: np.ndarray) -> float:
+    """Cohen's kappa from a confusion matrix (paper Table 1c's metric)."""
+    cm = cm.astype(np.float64)
+    n = cm.sum()
+    po = np.trace(cm) / n
+    pe = float((cm.sum(0) * cm.sum(1)).sum()) / (n * n)
+    return float((po - pe) / (1 - pe + 1e-12))
+
+
+def stack_models(models: Sequence[CNNELMModel]) -> StackedMembers:
+    """Host-level models -> the stacked member layout (leaves gain a
+    leading k dim) so they can ride the batched scoring surface."""
+    cnn_k = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[m.cnn_params for m in models])
+    beta_k = jnp.stack([jnp.asarray(m.beta) for m in models])
+    return StackedMembers(cnn_k, beta_k)
+
+
+@dataclass
+class Ensemble:
+    """k CNN-ELM models behind one batched scoring surface.
+
+    Every public method walks the eval set once in ``batch_size`` slices and
+    issues ONE ``_scores_stacked`` dispatch per slice — the k-model analogue
+    of the stacked Map phase, closing the ensemble-serving scenario.
+
+    ``combine`` picks the ensemble decision rule for ``predict``/
+    ``accuracy``/``kappa_combined``:
+    * ``"mean"`` — argmax of the mean member score (prediction averaging;
+      for these linear readouts it equals scoring the weight-averaged model
+      when members share CNN features, and is the stronger rule when not);
+    * ``"vote"`` — majority vote over member argmaxes (ties resolve to the
+      lowest class index, np.argmax convention).
+    """
+    cfg: Any
+    members: StackedMembers
+    combine: str = "mean"
+
+    def __post_init__(self):
+        if self.combine not in COMBINES:
+            raise ValueError(f"combine must be one of {COMBINES}, "
+                             f"got {self.combine!r}")
+
+    @classmethod
+    def from_models(cls, cfg, models: Sequence[CNNELMModel],
+                    combine: str = "mean") -> "Ensemble":
+        return cls(cfg, stack_models(models), combine=combine)
+
+    @property
+    def k(self) -> int:
+        return self.members.k
+
+    def _batched_scores(self, x, batch_size: int,
+                        use_pallas: Optional[bool]):
+        """Yield (k, B, C) score blocks, one stacked dispatch per block.
+        ``use_pallas`` resolves per call like every other eval entry."""
+        use_pallas = resolve_use_pallas(use_pallas)
+        for i in range(0, len(x), batch_size):
+            yield np.asarray(_scores_stacked(
+                self.cfg, self.members.cnn_params, self.members.beta,
+                jnp.asarray(x[i:i + batch_size]), use_pallas=use_pallas))
+
+    def member_scores(self, x, batch_size: int = 512,
+                      use_pallas: Optional[bool] = None) -> np.ndarray:
+        """(k, n, C) raw ELM scores for every member."""
+        return np.concatenate(
+            list(self._batched_scores(x, batch_size, use_pallas)), axis=1)
+
+    def member_predictions(self, x, batch_size: int = 512,
+                           use_pallas: Optional[bool] = None) -> np.ndarray:
+        """(k, n) argmax labels for every member."""
+        return np.concatenate(
+            [s.argmax(-1) for s in
+             self._batched_scores(x, batch_size, use_pallas)], axis=1)
+
+    def predict(self, x, batch_size: int = 512,
+                use_pallas: Optional[bool] = None) -> np.ndarray:
+        """(n,) combined ensemble labels under the ``combine`` rule."""
+        if self.combine == "mean":
+            mean_scores = np.concatenate(
+                [s.mean(axis=0) for s in
+                 self._batched_scores(x, batch_size, use_pallas)], axis=0)
+            return mean_scores.argmax(-1)
+        preds = self.member_predictions(x, batch_size, use_pallas)
+        C = self.cfg.num_classes
+        n = preds.shape[1]
+        votes = np.zeros((n, C), np.int64)
+        np.add.at(votes, (np.tile(np.arange(n), self.k), preds.reshape(-1)), 1)
+        return votes.argmax(-1)
+
+    def evaluate(self, x, y, batch_size: int = 512,
+                 use_pallas: Optional[bool] = None,
+                 preds: Optional[np.ndarray] = None) -> np.ndarray:
+        """(k,) per-member accuracy — equals the per-member ``evaluate``
+        loop, computed in 1/k the dispatches. Pass ``preds`` (a
+        ``member_predictions`` result) to reuse one scoring pass across
+        several metrics."""
+        if preds is None:
+            preds = self.member_predictions(x, batch_size, use_pallas)
+        elif preds.ndim != 2:
+            raise ValueError("evaluate takes member_predictions-shaped "
+                             f"(k, n) preds, got shape {preds.shape}")
+        return (preds == np.asarray(y)[None, :]).mean(axis=1)
+
+    def kappa(self, x, y, batch_size: int = 512,
+              use_pallas: Optional[bool] = None,
+              preds: Optional[np.ndarray] = None) -> np.ndarray:
+        """(k,) per-member Cohen's kappa (vectorised confusion matrices;
+        ``preds`` reuses a prior ``member_predictions`` pass)."""
+        if preds is None:
+            preds = self.member_predictions(x, batch_size, use_pallas)
+        elif preds.ndim != 2:
+            raise ValueError("kappa takes member_predictions-shaped "
+                             f"(k, n) preds, got shape {preds.shape}")
+        C = self.cfg.num_classes
+        return np.array([kappa_from_confusion(confusion_matrix(y, p, C))
+                         for p in preds])
+
+    def accuracy(self, x, y, batch_size: int = 512,
+                 use_pallas: Optional[bool] = None,
+                 preds: Optional[np.ndarray] = None) -> float:
+        """Combined-decision accuracy under the ``combine`` rule. Pass
+        ``preds`` (a ``predict`` result) to reuse one scoring pass across
+        several metrics instead of re-scoring the set per call."""
+        if preds is None:
+            preds = self.predict(x, batch_size, use_pallas)
+        elif preds.ndim != 1:
+            raise ValueError("accuracy takes predict-shaped (n,) preds, "
+                             f"got shape {preds.shape}")
+        return float((preds == np.asarray(y)).mean())
+
+    def kappa_combined(self, x, y, batch_size: int = 512,
+                       use_pallas: Optional[bool] = None,
+                       preds: Optional[np.ndarray] = None) -> float:
+        """Combined-decision Cohen's kappa under the ``combine`` rule
+        (``preds`` reuses a prior ``predict`` pass, as in ``accuracy``)."""
+        if preds is None:
+            preds = self.predict(x, batch_size, use_pallas)
+        elif preds.ndim != 1:
+            raise ValueError("kappa_combined takes predict-shaped (n,) "
+                             f"preds, got shape {preds.shape}")
+        return kappa_from_confusion(
+            confusion_matrix(y, preds, self.cfg.num_classes))
+
+    def averaged(self) -> CNNELMModel:
+        """The paper's Reduce over these members (uniform mean)."""
+        return self.members.averaged()
+
+
+# ---------------------------------------------------------------------------
+# Single-model eval (the non-deprecated home of the old evaluate/kappa)
+# ---------------------------------------------------------------------------
+
+def evaluate_model(cfg, model: CNNELMModel, x, y, batch_size: int = 512,
+                   use_pallas: Optional[bool] = None) -> float:
+    """Accuracy of one model (a k=1 ensemble ride on the batched surface).
+    Each call restacks the model's params into the member layout — in a hot
+    scoring loop, build ``Ensemble.from_models(cfg, [model])`` once and
+    reuse it instead."""
+    ens = Ensemble.from_models(cfg, [model])
+    return float(ens.evaluate(x, y, batch_size=batch_size,
+                              use_pallas=use_pallas)[0])
+
+
+def kappa_model(cfg, model: CNNELMModel, x, y, batch_size: int = 512,
+                use_pallas: Optional[bool] = None) -> float:
+    """Cohen's kappa of one model."""
+    ens = Ensemble.from_models(cfg, [model])
+    return float(ens.kappa(x, y, batch_size=batch_size,
+                           use_pallas=use_pallas)[0])

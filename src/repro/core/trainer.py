@@ -48,13 +48,22 @@ def make_member_train_step(cfg, optimizer, lr_schedule, clip: float = 1.0,
     return jax.vmap(step, in_axes=0, out_axes=0, spmd_axis_name=spmd_axis_name)
 
 
-def make_average_step():
+def make_average_step(weights=None):
     """Reduce phase (Alg. 2 lines 18-20): one cross-pod all-reduce mean,
-    broadcast back as every member's next-round init."""
+    broadcast back as every member's next-round init.
+
+    This is the ROUNDS CONTRACT: the returned step is exactly what a
+    multi-round averaging run (``runner.ReduceConfig(rounds=r)``, or the
+    launcher's ``--rounds``) applies between rounds — weighted by ``weights``
+    (e.g. shard sizes) when the Reduce strategy is non-uniform, uniform
+    otherwise. Applying it at round boundaries and once more at the end
+    reproduces the parallel-SGD regime; applying it only at the end is the
+    paper's single final average."""
 
     def average_step(stacked_params):
         k = jax.tree.leaves(stacked_params)[0].shape[0]
-        return broadcast_member_dim(average_member_dim(stacked_params), k)
+        return broadcast_member_dim(
+            average_member_dim(stacked_params, weights=weights), k)
 
     return average_step
 

@@ -73,6 +73,11 @@ def main(argv=None):
     ap.add_argument("--members", type=int, default=2)
     ap.add_argument("--avg-period", type=int, default=0,
                     help="0 = single final average (paper-faithful)")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="spread R averaging events over --steps (the "
+                         "parallel-SGD rounds contract, same as "
+                         "runner.ReduceConfig(rounds=R)); overrides "
+                         "--avg-period; 0 = use --avg-period")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -99,6 +104,20 @@ def main(argv=None):
     }[args.schedule]()
 
     step_fn = jax.jit(trainer.make_train_step(cfg, opt, sched))
+    # the rounds contract: --rounds R == one averaging event every
+    # steps/R steps (runner.ReduceConfig(rounds=R) at LM scale); each event
+    # is the same mean+broadcast trainer.make_average_step lowers for the
+    # multi-pod mesh — here members share one averaged host tree instead of
+    # materialising a k-wide stack per sync
+    if args.rounds:
+        if args.rounds < 1:
+            raise SystemExit(f"--rounds must be >= 1, got {args.rounds}")
+        if args.steps % args.rounds:
+            raise SystemExit(f"--steps {args.steps} must split evenly into "
+                             f"--rounds {args.rounds}")
+        avg_period = args.steps // args.rounds
+    else:
+        avg_period = args.avg_period
 
     key = jax.random.PRNGKey(args.seed)
     init_params = api.init_params(cfg, key)  # same init for all members (Alg.2 l.3)
@@ -108,7 +127,7 @@ def main(argv=None):
 
     n_params = cfg.param_count()
     print(f"# arch={cfg.name} params={n_params/1e6:.1f}M members={args.members} "
-          f"avg_period={args.avg_period or 'final'} non_iid={args.non_iid}")
+          f"avg_period={avg_period or 'final'} non_iid={args.non_iid}")
 
     history = []
     t0 = time.time()
@@ -120,7 +139,7 @@ def main(argv=None):
             new_members.append((p, o, s))
             losses.append(float(metrics["loss"]))
         members = new_members
-        if args.avg_period and (step + 1) % args.avg_period == 0:
+        if avg_period and (step + 1) % avg_period == 0:
             avg = average_trees([m[0] for m in members])
             members = [(avg, o, s) for (_, o, s) in members]
         history.append(losses)

@@ -311,17 +311,19 @@ def test_backend_env_override_applies_per_call(monkeypatch):
 
 
 def test_eval_backend_is_pluggable():
-    """_scores takes use_pallas as a static arg (regression: the auto
-    policy was baked into the first trace, so REPRO_USE_PALLAS flips and
-    explicit backend requests were silently ignored for evaluate/kappa)."""
+    """The live scoring jit (runner._scores_stacked — every eval entry
+    routes through it) takes use_pallas as a static arg (regression: the
+    auto policy was baked into the first trace, so REPRO_USE_PALLAS flips
+    and explicit backend requests were silently ignored for eval)."""
+    from repro.core import runner
     ds = make_extended_mnist(n_per_class=4, seed=2)
-    params = cnn.init_params(CFG, KEY)
-    beta = jax.numpy.zeros((cnn.feature_dim(CFG), CFG.num_classes))
+    params_k = jax.tree.map(lambda a: a[None], cnn.init_params(CFG, KEY))
+    beta_k = jax.numpy.zeros((1, cnn.feature_dim(CFG), CFG.num_classes))
     x = jax.numpy.asarray(ds.x[:8])
-    ref = cnn_elm._scores.lower(CFG, params, beta, x,
-                                use_pallas=False).as_text()
-    forced = cnn_elm._scores.lower(CFG, params, beta, x,
-                                   use_pallas=True).as_text()
+    ref = runner._scores_stacked.lower(CFG, params_k, beta_k, x,
+                                       use_pallas=False).as_text()
+    forced = runner._scores_stacked.lower(CFG, params_k, beta_k, x,
+                                          use_pallas=True).as_text()
     assert "stablehlo.convolution" in ref        # XLA reference path
     assert "stablehlo.convolution" not in forced  # im2col + Pallas GEMM
 
@@ -387,3 +389,24 @@ def test_map_phase_chunked_benchmark_smoke(tmp_path):
     assert payload["bit_identical"] is True
     assert payload["peak_bytes"] == 2 * payload["chunk_bytes"]
     assert payload["peak_bytes"] < payload["epoch_bytes"]
+
+
+def test_map_phase_rounds_benchmark_smoke(tmp_path):
+    """Multi-round config: well-formed BENCH_map_phase_rounds.json with one
+    per-round dispatch entry per round and a positive sync overhead."""
+    from benchmarks import map_phase
+    payload = map_phase.run_rounds(k=2, n_per_class=8, epochs=2,
+                                   batch_size=16, rounds=2, iters=1,
+                                   out_dir=str(tmp_path))
+    on_disk = json.loads((tmp_path / "BENCH_map_phase_rounds.json")
+                         .read_text())
+    for key in ("single_round_us", "multi_round_us", "sync_overhead",
+                "rounds", "epochs_per_round", "round_dispatches",
+                "total_dispatches"):
+        assert key in on_disk, key
+    assert len(payload["round_dispatches"]) == payload["rounds"] == 2
+    assert payload["epochs_per_round"] == 1
+    assert payload["single_round_us"] > 0 and payload["multi_round_us"] > 0
+    with pytest.raises(ValueError, match="split into rounds"):
+        map_phase.run_rounds(k=2, n_per_class=8, epochs=3, batch_size=16,
+                             rounds=2, iters=1, out_dir=str(tmp_path))

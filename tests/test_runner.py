@@ -1,0 +1,378 @@
+"""The composable MapReduce runner (`repro.core.runner`): config
+validation, rounds=1 equivalence against the Algorithm-2 reference on both
+backends, the unified member-seed rule, multi-round averaging semantics +
+telemetry, the batched Ensemble scoring surface, the vectorised
+confusion-matrix kappa, and the deprecation shims."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_reduced_config, replace
+from repro.core import cnn_elm, runner
+from repro.core.runner import (AveragingRun, Ensemble, MapConfig,
+                               ReduceConfig, confusion_matrix,
+                               evaluate_model, kappa_from_confusion,
+                               kappa_model, stack_models)
+from repro.data.partition import partition_iid, partition_unequal
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+CFG = get_reduced_config("cnn_elm_6c12c")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    ds = make_extended_mnist(n_per_class=20, seed=0)
+    return partition_iid(ds.x, ds.y, k=3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def testset():
+    return make_extended_mnist(n_per_class=8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def elm_run(parts):
+    """One epochs=0 stacked run shared by the Ensemble tests."""
+    return AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                       backend="stacked")).run(parts, KEY)
+
+
+def _assert_models_equal(a, b, *, exact=True, rtol=1e-4):
+    f = (np.testing.assert_array_equal if exact else
+         lambda x, y: np.testing.assert_allclose(x, y, rtol=rtol, atol=2e-5))
+    f(np.asarray(a.beta), np.asarray(b.beta))
+    for la, lb in zip(jax.tree.leaves(a.cnn_params),
+                      jax.tree.leaves(b.cnn_params)):
+        f(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation(parts):
+    with pytest.raises(ValueError, match="backend"):
+        MapConfig(backend="vectorized")
+    with pytest.raises(ValueError, match="lr_schedule"):
+        MapConfig(epochs=2)
+    with pytest.raises(ValueError, match="epochs"):
+        MapConfig(epochs=-1)
+    with pytest.raises(ValueError, match="strategy"):
+        ReduceConfig(strategy="by_shard")
+    with pytest.raises(ValueError, match="rounds"):
+        ReduceConfig(rounds=0)
+    with pytest.raises(ValueError, match="explicit weights"):
+        ReduceConfig(strategy=[1.0, 2.0]).resolve_weights(parts)
+    assert ReduceConfig().resolve_weights(parts) is None
+    assert ReduceConfig(strategy="shard_weighted").resolve_weights(parts) \
+        == [float(len(p.x)) for p in parts]
+    assert ReduceConfig(strategy=(3, 1, 1)).resolve_weights(parts) \
+        == [3.0, 1.0, 1.0]
+
+
+def test_rounds_validation(parts):
+    lr = dynamic_paper(0.05)
+    with pytest.raises(ValueError, match="stacked"):
+        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
+                                    backend="sequential"),
+                     ReduceConfig(rounds=2)).run(parts, KEY)
+    with pytest.raises(ValueError, match="epochs=0"):
+        AveragingRun(CFG, MapConfig(epochs=0),
+                     ReduceConfig(rounds=2)).run(parts, KEY)
+    with pytest.raises(ValueError, match="split evenly"):
+        AveragingRun(CFG, MapConfig(epochs=3, lr_schedule=lr, batch_size=32),
+                     ReduceConfig(rounds=2)).run(parts, KEY)
+
+
+# ---------------------------------------------------------------------------
+# rounds=1 reproduces the Algorithm-2 reference (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["sequential", "stacked"])
+def test_rounds1_elm_only_bit_exact(parts, backend):
+    """epochs=0: both backends must reproduce the train_member reference
+    members bit-exactly under the MapConfig.seed rule."""
+    res = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                      backend=backend)).run(parts, KEY)
+    init = cnn.init_params(CFG, KEY)
+    cfg_map = MapConfig(epochs=0, batch_size=32)
+    ref = [cnn_elm.train_member(CFG, init, p, epochs=0, lr_schedule=None,
+                                batch_size=32, seed=cfg_map.member_seed(i))
+           for i, p in enumerate(parts)]
+    for a, b in zip(res.members, ref):
+        _assert_models_equal(a, b, exact=True)
+    ref_avg = cnn_elm.average_models(ref)
+    np.testing.assert_allclose(np.asarray(res.averaged.beta),
+                               np.asarray(ref_avg.beta), rtol=1e-6,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["sequential", "stacked"])
+def test_rounds1_sgd_matches_reference(parts, backend):
+    """epochs=2 SGD: rtol 1e-4 against the sequential reference loop."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    res = AveragingRun(cfg, MapConfig(epochs=2, lr_schedule=lr,
+                                      batch_size=32, backend=backend)
+                       ).run(parts, KEY)
+    init = cnn.init_params(cfg, KEY)
+    ref = [cnn_elm.train_member(cfg, init, p, epochs=2, lr_schedule=lr,
+                                batch_size=32, seed=1000 + i)
+           for i, p in enumerate(parts)]
+    for a, b in zip(res.members, ref):
+        _assert_models_equal(a, b, exact=(backend == "sequential"),
+                             rtol=1e-4)
+
+
+def test_member_seed_rule_unified(parts):
+    """THE seed rule: MapConfig(seed=s) -> member i trains on stream
+    default_rng(s + i), identically on both backends (epochs=0 bit-exact).
+    Regression: the sequential path used to hardcode 1000 + i."""
+    cfg_map = MapConfig(epochs=0, batch_size=32, seed=77)
+    assert [cfg_map.member_seed(i) for i in range(3)] == [77, 78, 79]
+    res_seq = AveragingRun(
+        CFG, MapConfig(epochs=0, batch_size=32, backend="sequential",
+                       seed=77)).run(parts, KEY)
+    res_st = AveragingRun(
+        CFG, MapConfig(epochs=0, batch_size=32, backend="stacked",
+                       seed=77)).run(parts, KEY)
+    init = cnn.init_params(CFG, KEY)
+    for i, (a, b) in enumerate(zip(res_seq.members, res_st.members)):
+        ref = cnn_elm.train_member(CFG, init, parts[i], epochs=0,
+                                   lr_schedule=None, batch_size=32,
+                                   seed=77 + i)
+        _assert_models_equal(a, ref, exact=True)
+        _assert_models_equal(b, ref, exact=True)
+
+
+def test_shard_weighted_reduce(parts):
+    """The stacked weighted Reduce (average_member_dim) equals the host
+    weighted mean (average_models) up to f32 summation order — eps-level
+    tolerance, same bar as the sequential-vs-stacked averaged checks."""
+    ds = make_extended_mnist(n_per_class=20, seed=0)
+    uneq = partition_unequal(ds.x, ds.y, [96, 64, 33], seed=1)
+    res = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32),
+                       ReduceConfig(strategy="shard_weighted")
+                       ).run(uneq, KEY)
+    ref = cnn_elm.average_models(res.members, weights=[96.0, 64.0, 33.0])
+    np.testing.assert_allclose(np.asarray(res.averaged.beta),
+                               np.asarray(ref.beta), rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Multi-round averaging
+# ---------------------------------------------------------------------------
+
+def test_multi_round_sync_semantics(parts):
+    """rounds=2 with lr schedule [0.05, 0]: round 2's SGD is a no-op, so
+    every member's final CNN params must equal round 1's averaged params —
+    the sync is exactly broadcast(average(.)) between rounds."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    caught = {}
+    res = AveragingRun(
+        cfg, MapConfig(epochs=2, lr_schedule=lambda e: [0.05, 0.0][e],
+                       batch_size=32),
+        ReduceConfig(rounds=2)).run(
+        parts, KEY, round_hook=lambda r, m: caught.setdefault(r, m))
+    avg_r0 = caught[0]
+    for m in res.members:
+        for la, lb in zip(jax.tree.leaves(m.cnn_params),
+                          jax.tree.leaves(avg_r0.cnn_params)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_multi_round_telemetry_and_hooks(parts):
+    """rounds=2: one RoundRecord per round with the right epoch spans,
+    positive wall time and dispatch counts, hook results stored; rounds
+    actually change the result vs rounds=1."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    mk = lambda r: AveragingRun(
+        cfg, MapConfig(epochs=2, lr_schedule=lr, batch_size=32),
+        ReduceConfig(rounds=r))
+    res2 = mk(2).run(parts, KEY, round_hook=lambda r, m: f"round-{r}")
+    assert [r.round for r in res2.rounds] == [0, 1]
+    assert [(r.epoch_start, r.epoch_end) for r in res2.rounds] == \
+        [(0, 1), (1, 2)]
+    assert all(r.wall_time_s > 0 and r.dispatches > 0 for r in res2.rounds)
+    assert [r.hook for r in res2.rounds] == ["round-0", "round-1"]
+    assert res2.dispatches >= sum(r.dispatches for r in res2.rounds)
+    assert res2.round_syncs == 1  # the inter-round sync is counted
+    res1 = mk(1).run(parts, KEY)
+    assert len(res1.rounds) == 1
+    assert res1.round_syncs == 0
+    assert res2.dispatches > res1.dispatches  # extra solve + sync priced in
+    assert not np.allclose(np.asarray(res1.averaged.beta),
+                           np.asarray(res2.averaged.beta)), \
+        "multi-round sync must change the trajectory"
+
+
+def test_multi_round_weighted_sync():
+    """Shard-weighted multi-round: the inter-round sync must weight by
+    shard size too (verified via the lr=0 second round against the
+    weighted average of round 1's members). The hook's averaged model and
+    the sync share ONE reduction path (average_member_dim), so the match
+    is bit-exact — the hook reports exactly the model members were reset
+    to."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    ds = make_extended_mnist(n_per_class=20, seed=0)
+    uneq = partition_unequal(ds.x, ds.y, [96, 64], seed=1)
+    caught = {}
+    res = AveragingRun(
+        cfg, MapConfig(epochs=2, lr_schedule=lambda e: [0.05, 0.0][e],
+                       batch_size=32),
+        ReduceConfig(strategy="shard_weighted", rounds=2)).run(
+        uneq, KEY, round_hook=lambda r, m: caught.setdefault(r, m))
+    for m in res.members:
+        for la, lb in zip(jax.tree.leaves(m.cnn_params),
+                          jax.tree.leaves(caught[0].cnn_params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Ensemble: batched scoring surface
+# ---------------------------------------------------------------------------
+
+def test_ensemble_evaluate_matches_member_loop(elm_run, testset):
+    """(k,) batched accuracies == the one-model-at-a-time loop, exactly."""
+    ens = elm_run.ensemble()
+    accs = ens.evaluate(testset.x, testset.y)
+    ref = [evaluate_model(CFG, m, testset.x, testset.y)
+           for m in elm_run.members]
+    assert accs.shape == (ens.k,)
+    np.testing.assert_array_equal(accs, np.asarray(ref))
+
+
+def test_ensemble_kappa_matches_member_loop(elm_run, testset):
+    ens = elm_run.ensemble()
+    kaps = ens.kappa(testset.x, testset.y)
+    ref = [kappa_model(CFG, m, testset.x, testset.y)
+           for m in elm_run.members]
+    np.testing.assert_allclose(kaps, ref, rtol=1e-12)
+
+
+def test_ensemble_one_dispatch_per_eval_batch(elm_run, testset, monkeypatch):
+    """k members, n rows, batch B -> ceil(n/B) stacked dispatches, not
+    k * ceil(n/B): the whole point of the batched surface."""
+    calls = []
+    orig = runner._scores_stacked
+
+    def counting(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(runner, "_scores_stacked", counting)
+    ens = elm_run.ensemble()
+    ens.evaluate(testset.x, testset.y, batch_size=32)
+    assert len(calls) == -(-len(testset.x) // 32)
+
+
+def test_ensemble_combination_modes(elm_run, testset):
+    """vote and mean-score produce valid labels; mean equals argmax of the
+    member-score mean; combine validation rejects unknown modes."""
+    mean_ens = elm_run.ensemble(combine="mean")
+    vote_ens = elm_run.ensemble(combine="vote")
+    p_mean = mean_ens.predict(testset.x)
+    p_vote = vote_ens.predict(testset.x)
+    assert p_mean.shape == p_vote.shape == (len(testset.x),)
+    scores = mean_ens.member_scores(testset.x)
+    assert scores.shape == (mean_ens.k, len(testset.x), CFG.num_classes)
+    np.testing.assert_array_equal(p_mean, scores.mean(axis=0).argmax(-1))
+    # majority vote: every predicted label is some member's prediction
+    member_preds = mean_ens.member_predictions(testset.x)
+    assert ((p_vote[None, :] == member_preds).any(axis=0)).all()
+    for ens in (mean_ens, vote_ens):
+        acc = ens.accuracy(testset.x, testset.y)
+        kap = ens.kappa_combined(testset.x, testset.y)
+        assert 0.0 <= acc <= 1.0 and -1.0 <= kap <= 1.0
+    with pytest.raises(ValueError, match="combine"):
+        elm_run.ensemble(combine="max")
+
+
+def test_ensemble_from_models_roundtrip(elm_run, testset):
+    """Sequential-backend members ride the same surface via stack_models."""
+    ens = Ensemble.from_models(CFG, elm_run.members)
+    np.testing.assert_array_equal(
+        ens.evaluate(testset.x, testset.y),
+        elm_run.ensemble().evaluate(testset.x, testset.y))
+    sm = stack_models(elm_run.members)
+    np.testing.assert_array_equal(np.asarray(sm.beta),
+                                  np.asarray(elm_run.stacked.beta))
+
+
+# ---------------------------------------------------------------------------
+# Vectorised kappa
+# ---------------------------------------------------------------------------
+
+def test_confusion_matrix_vectorised():
+    """np.add.at scatter == the interpreter loop it replaced."""
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 7, size=500)
+    p = rng.integers(0, 7, size=500)
+    cm = confusion_matrix(y, p, 7)
+    ref = np.zeros((7, 7))
+    for a, b in zip(y, p):
+        ref[a, b] += 1
+    np.testing.assert_array_equal(cm, ref)
+    assert cm.sum() == 500
+
+
+def test_kappa_from_confusion_formula():
+    """Perfect agreement -> 1; the old inline formula on a known matrix."""
+    assert kappa_from_confusion(np.eye(4) * 25) == pytest.approx(1.0)
+    cm = np.array([[20, 5], [10, 15]])
+    n, po = cm.sum(), np.trace(cm) / cm.sum()
+    pe = float((cm.sum(0) * cm.sum(1)).sum()) / (n * n)
+    assert kappa_from_confusion(cm) == pytest.approx(
+        (po - pe) / (1 - pe + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_distributed_cnn_elm_shim_warns_and_forwards(parts):
+    with pytest.warns(DeprecationWarning, match="AveragingRun"):
+        members, avg = cnn_elm.distributed_cnn_elm(
+            CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=32)
+    res = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                      backend="sequential")).run(parts, KEY)
+    for a, b in zip(members, res.members):
+        _assert_models_equal(a, b, exact=True)
+    np.testing.assert_array_equal(np.asarray(avg.beta),
+                                  np.asarray(res.averaged.beta))
+
+
+def test_evaluate_kappa_shims_warn_and_forward(elm_run, testset):
+    model = elm_run.members[0]
+    with pytest.warns(DeprecationWarning, match="evaluate_model"):
+        acc = cnn_elm.evaluate(CFG, model, testset.x, testset.y)
+    assert acc == evaluate_model(CFG, model, testset.x, testset.y)
+    with pytest.warns(DeprecationWarning, match="kappa_model"):
+        kap = cnn_elm.kappa(CFG, model, testset.x, testset.y)
+    assert kap == pytest.approx(
+        kappa_model(CFG, model, testset.x, testset.y), abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+def test_dispatch_telemetry_ratio(parts):
+    """The sequential backend pays per-batch-per-member dispatches; the
+    stacked backend pays one scan + one solve — RunResult telemetry must
+    show exactly that."""
+    seq = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                      backend="sequential")).run(parts, KEY)
+    st = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                     backend="stacked")).run(parts, KEY)
+    nb = sum(len(p.x) // 32 for p in parts)
+    assert seq.dispatches == nb + len(parts)  # stats per batch + final solve
+    assert st.dispatches == 2                 # one scan chunk + one solve
+    assert seq.wall_time_s > 0 and st.wall_time_s > 0
+    assert st.backend == "stacked" and seq.backend == "sequential"
+    assert seq.stacked is None and st.stacked is not None
