@@ -24,15 +24,29 @@ Four configs, four JSONs under ``experiments/``:
   (``rounds=1``) vs multi-round parallel-SGD averaging (``rounds=r``): the
   wall-clock price of communicating every epochs/r epochs, with per-round
   dispatch telemetry.
+* ``run_mesh``    → ``BENCH_map_phase_mesh.json`` — the MeshExecutor
+  scaling sweep: k members shard_map-ed over {1, 2, 4, 8} simulated pods
+  (the process re-execs itself under
+  ``--xla_force_host_platform_device_count`` when it sees too few
+  devices), with the one-collective-per-round cost model read straight
+  off the compiled HLO (all-reduce count + per-chip bytes for the sync
+  and the Reduce). Simulated pods share the physical CPU, so the sweep
+  measures dispatch/collective STRUCTURE, not compute scaling.
 
 Run standalone: ``PYTHONPATH=src python -m benchmarks.map_phase``
 (``--smoke`` for the tiny CI config; or via ``benchmarks/run.py``).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, save_result, time_call
 from repro.configs.base import get_reduced_config
@@ -43,6 +57,7 @@ from repro.models import cnn
 from repro.optim.schedules import dynamic_paper
 
 KEY = jax.random.PRNGKey(0)
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def _workload(n_per_class: int):
@@ -257,6 +272,162 @@ def run_rounds(k: int = 4, n_per_class: int = 40, epochs: int = 4,
     return payload
 
 
+def run_mesh(k: int = 8, n_per_class: int = 80, epochs: int = 2,
+             batch_size: int = 32, rounds: int = 2,
+             devices=(1, 2, 4, 8), iters: int = 2, out_dir: str = None):
+    """MeshExecutor scaling sweep: the SAME k-member workload over 1, 2, 4
+    and 8 simulated pods, against the single-program stacked baseline.
+
+    When the current process has fewer devices than ``max(devices)`` it
+    re-execs itself with ``--xla_force_host_platform_device_count`` (jax
+    locks the device count at first init, so the flag cannot be applied
+    in-process) and returns the child's JSON payload.
+
+    Besides wall-clock the payload records the one-collective-per-round
+    cost model, measured off the compiled HLO (not asserted by hand):
+    ``allreduce_per_sync`` / ``allreduce_per_reduce`` MUST be exactly 1 —
+    a round costs epochs/rounds scan dispatches with ZERO collectives plus
+    one all-reduce of the flat member-weighted tree; the final Reduce is
+    one all-reduce of (params, β). The averaged β is also checked against
+    the stacked baseline every timed config (rtol 1e-4)."""
+    need = max(devices)
+    if len(jax.devices()) < need:
+        # the forced-host-device flag only works on the CPU backend, and a
+        # child that inherited it yet still sees too few devices must not
+        # fork again — both would loop this re-exec forever
+        if jax.default_backend() != "cpu":
+            raise RuntimeError(
+                f"run_mesh needs {need} devices but the {jax.default_backend()}"
+                f" backend has {len(jax.devices())} and simulated host "
+                f"devices only exist on CPU — run with JAX_PLATFORMS=cpu or "
+                f"pass devices= within the real device count")
+        if os.environ.get("_REPRO_MESH_SWEEP_CHILD"):
+            raise RuntimeError(
+                f"mesh-sweep child still sees {len(jax.devices())} devices "
+                f"(< {need}) despite the forced flag — refusing to re-exec "
+                f"again")
+        out_dir = out_dir or os.path.join(ROOT, "experiments")
+        from repro.launch.mesh import host_device_flags
+        env = dict(
+            os.environ,
+            _REPRO_MESH_SWEEP_CHILD="1",
+            PYTHONPATH=os.pathsep.join(
+                [os.path.join(ROOT, "src"), ROOT,
+                 os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+            XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") + " " +
+                       host_device_flags(need)).strip())
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.map_phase", "--mesh-sweep",
+             "--k", str(k), "--n-per-class", str(n_per_class),
+             "--epochs", str(epochs), "--batch-size", str(batch_size),
+             "--rounds", str(rounds),
+             "--devices", ",".join(map(str, devices)),
+             "--iters", str(iters), "--out-dir", out_dir],
+            check=True, env=env, cwd=ROOT)
+        with open(os.path.join(out_dir, "BENCH_map_phase_mesh.json")) as f:
+            return json.load(f)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import executor
+    from repro.launch.hlo_analysis import collective_stats
+
+    cfg, ds, lr = _workload(n_per_class)
+    if epochs:
+        # λ=1 keeps the per-batch β solve well-conditioned, so the
+        # cross-backend equivalence guard below measures implementation
+        # equivalence instead of f32 amplification through a
+        # nearly-singular normal matrix — the same choice the SGD
+        # equivalence tests make
+        from repro.configs.base import replace
+        cfg = replace(cfg, elm_lambda=1.0)
+    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
+    reduce_cfg = ReduceConfig(rounds=rounds if epochs else 1)
+    last = {}
+
+    def variant(backend, mesh=None):
+        runner = AveragingRun(
+            cfg, MapConfig(epochs=epochs, lr_schedule=lr,
+                           batch_size=batch_size, backend=backend,
+                           mesh=mesh), reduce_cfg)
+
+        def go():
+            last[backend] = runner.run(parts, KEY)
+            return last[backend].averaged.beta
+        return go
+
+    st_us = time_call(variant("stacked"), warmup=1, iters=iters)
+    st_beta = np.asarray(last["stacked"].averaged.beta)
+
+    sweep = []
+    for d in devices:
+        mesh = jax.make_mesh((d,), ("pod",))
+        us = time_call(variant("mesh", mesh), warmup=1, iters=iters)
+        res = last["mesh"]
+        np.testing.assert_allclose(          # equivalence guard, every config
+            np.asarray(res.averaged.beta), st_beta, rtol=1e-4, atol=1e-4)
+        k_pad = -(-k // d) * d
+        sweep.append({
+            "devices": d,
+            "mesh_us": us,
+            "speedup_vs_stacked": st_us / us,
+            "k_pad": k_pad,
+            "members_per_pod": k_pad // d,
+            "pad_members": k_pad - k,
+            "dispatches": res.dispatches,
+            "round_syncs": res.round_syncs,
+        })
+
+    # the cost model, read off the compiled HLO at the largest mesh
+    mesh = jax.make_mesh((need,), ("pod",))
+    ex = executor.MeshExecutor(mesh=mesh)
+    ex._begin(cfg, k)
+    params_k = ex._place_params(cnn.init_params(cfg, KEY))
+    w = ex._weights_dev(None)
+    sync_cs = collective_stats(executor._mesh_sync.lower(
+        mesh, params_k, w).compile().as_text())
+    beta_k = jax.device_put(
+        jnp.zeros((ex._k_pad, cnn.feature_dim(cfg), cfg.num_classes)),
+        NamedSharding(mesh, P("pod")))
+    red_cs = collective_stats(executor._mesh_reduce.lower(
+        mesh, (params_k, beta_k), w).compile().as_text())
+
+    payload = {
+        "stacked_us": st_us,
+        "sweep": sweep,
+        "k": k,
+        "epochs": epochs,
+        "rounds": rounds if epochs else 1,
+        "batch_size": batch_size,
+        "feature_dim": cnn.feature_dim(cfg),
+        "allreduce_per_sync": sync_cs.count_by_kind.get("all-reduce", 0),
+        "allreduce_per_reduce": red_cs.count_by_kind.get("all-reduce", 0),
+        "sync_collective_per_chip_bytes": sync_cs.per_chip_bytes,
+        "reduce_collective_per_chip_bytes": red_cs.per_chip_bytes,
+        "cost_model": "per round: epochs/rounds scan dispatches with 0 "
+                      "collectives + 1 all-reduce of the flat weighted "
+                      "param tree; final Reduce: 1 all-reduce of "
+                      "(params, beta)",
+        "note": "simulated host pods share one physical CPU — the sweep "
+                "measures dispatch/collective structure, not compute "
+                "scaling",
+        "backend": jax.default_backend(),
+    }
+    # the contract gate runs BEFORE anything is persisted — a violation
+    # must not leave a fresh-but-invalid artifact for later readers
+    if payload["allreduce_per_sync"] != 1 or \
+            payload["allreduce_per_reduce"] != 1:
+        raise AssertionError(
+            f"one-collective contract violated: sync="
+            f"{sync_cs.count_by_kind} reduce={red_cs.count_by_kind}")
+    save_result("BENCH_map_phase_mesh", payload, out_dir=out_dir)
+    emit(f"map_phase_stacked_k{k}_e{epochs}_baseline", st_us, "single device")
+    for row in sweep:
+        emit(f"map_phase_mesh_k{k}_d{row['devices']}", row["mesh_us"],
+             f"{row['members_per_pod']}/pod pad={row['pad_members']} "
+             f"{row['speedup_vs_stacked']:.2f}x")
+    return payload
+
+
 def main(smoke: bool = False):
     kw = {}
     if smoke:
@@ -272,6 +443,13 @@ def main(smoke: bool = False):
     # rounds needs epochs divisible by rounds; the smoke tier runs the
     # smallest multi-round config (2 epochs, sync after epoch 1)
     run_rounds(rounds=2, **{**kw, "epochs": 2}) if smoke else run_rounds()
+    # the mesh sweep re-execs under forced host devices; smoke sweeps a
+    # 2-pod mesh only (1 epoch, single final average)
+    if smoke:
+        run_mesh(k=2, n_per_class=8, epochs=1, batch_size=16, rounds=1,
+                 devices=(1, 2), iters=1, out_dir=kw["out_dir"])
+    else:
+        run_mesh()
 
 
 if __name__ == "__main__":
@@ -279,4 +457,23 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config (k=2, 1 epoch, 1 iter)")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--mesh-sweep", action="store_true",
+                    help="run ONLY the mesh scaling sweep inline (the "
+                         "re-exec child entry — expects the forced host "
+                         "device count already in XLA_FLAGS)")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--n-per-class", type=int, default=80)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--devices", default="1,2,4,8")
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+    if args.mesh_sweep:
+        run_mesh(k=args.k, n_per_class=args.n_per_class, epochs=args.epochs,
+                 batch_size=args.batch_size, rounds=args.rounds,
+                 devices=tuple(int(d) for d in args.devices.split(",")),
+                 iters=args.iters, out_dir=args.out_dir)
+    else:
+        main(smoke=args.smoke)

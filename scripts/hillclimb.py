@@ -6,13 +6,15 @@ hypothesis -> change -> before -> after rows.
   PYTHONPATH=src python scripts/hillclimb.py --list
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import force_host_device_count  # noqa: E402
+force_host_device_count()   # REPRO_HOST_DEVICES override, default 512
 
 import argparse  # noqa: E402
 import json      # noqa: E402
-import sys       # noqa: E402
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch import dryrun  # noqa: E402
 

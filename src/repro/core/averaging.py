@@ -7,7 +7,11 @@ Three deployment flavours:
 * ``average_member_dim``  — members stacked on a leading dim (the multi-pod
                             layout: member dim sharded over the 'pod' axis;
                             the mean lowers to one all-reduce across pods).
-* ``pmean_members``       — inside shard_map/pjit over a named axis.
+* ``pmean_members``       — inside shard_map/pjit over a named axis, one
+                            pmean per leaf.
+* ``psum_weighted_mean_members`` — inside shard_map over the member axis:
+                            the whole (weighted) tree mean as ONE collective
+                            (flat psum) — the MeshExecutor's Reduce/sync.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
 
 def average_trees(members: Sequence):
@@ -70,3 +75,25 @@ def broadcast_member_dim(params, k: int):
 
 def pmean_members(params, axis_name: str):
     return jax.tree.map(lambda a: jax.lax.pmean(a, axis_name), params)
+
+
+def psum_weighted_mean_members(tree, local_weights, axis_name: str):
+    """In-SPMD weighted mean over the GLOBAL member dim as ONE collective.
+
+    Call inside shard_map with the member dim sharded over ``axis_name``:
+    every leaf has local shape (k_local, ...) and ``local_weights`` is this
+    device's (k_local,) slice of the member weight vector. The f32 weighted
+    partial sums of every leaf AND the local weight total are raveled into
+    a single flat vector and ``psum``-ed once — guaranteed one all-reduce
+    in the compiled HLO, unlike a per-leaf ``pmean_members`` which leaves
+    the collective count to XLA's combiner. Zero weights drop members
+    entirely (the padded-member contract); weights need not be normalised
+    (the global weight sum rides the same psum)."""
+    parts = jax.tree.map(
+        lambda a: jnp.tensordot(local_weights.astype(jnp.float32),
+                                a.astype(jnp.float32), axes=1), tree)
+    flat, unravel = ravel_pytree((parts, jnp.sum(local_weights,
+                                                 dtype=jnp.float32)))
+    parts, wsum = unravel(jax.lax.psum(flat, axis_name))
+    return jax.tree.map(lambda s, ref: (s / wsum).astype(ref.dtype),
+                        parts, tree)

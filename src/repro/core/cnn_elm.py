@@ -17,42 +17,36 @@ is solved once — pure CNN-as-random-feature ELM.
 
 Reduce (lines 18-20): average every Wᵢ, bᵢ, βᵢ across the k members.
 
-Two Map-phase implementations:
+This module is the MATH of the Map phase:
 
-* ``train_member``          — the faithful sequential reference: a host-side
+* ``train_member``        — the faithful sequential reference: a host-side
   Python batch loop, three jit dispatches per batch per member.
-* ``train_members_stacked`` — the fast path: all k members' params and ELM
-  stats stacked on a leading member dim, the per-batch step ``vmap``-ed over
-  members, and the batch loop rolled into one donated ``lax.scan`` per
-  host→device chunk. Numerically equivalent to k calls of ``train_member``
-  (same init, same batch order per epoch).
+* ``stacked_epoch_scan``  — the pure stacked scan body: all k members'
+  params and ELM stats on a leading member dim, the per-batch step
+  ``vmap``-ed over members, the batch loop rolled into one ``lax.scan``.
+  Unequal partitions ride through padding + a per-batch validity mask
+  (masked batches contribute zero stats and skip the SGD update).
 
-Unequal partitions ride the stacked path through padding + a per-batch
-validity mask: every member's epoch is padded to the max batch count,
-masked batches contribute zero to the ELM stats (mask-aware
-``elm.batch_stats``) and skip the SGD update, so each member's trajectory
-is bit-identical to its own sequential run. ``chunk_batches`` bounds peak
-device memory: the epoch streams as fixed-size host→device chunks,
-double-buffered (chunk i+1 transfers while chunk i scans), one dispatch
-per chunk.
+HOW that body runs — the epoch/round loop, chunked double-buffered
+host→device pipelining, multi-round syncs, mesh placement/shard_map, and
+telemetry — lives in ``repro.core.executor`` (``SequentialExecutor`` /
+``StackedExecutor`` / ``MeshExecutor``); ``train_members_stacked`` below
+is a thin veneer over ``StackedExecutor`` kept for engine-level callers.
+The supported entry point is ``repro.core.runner``
+(``MapConfig``/``ReduceConfig``/``AveragingRun`` + the batched
+``Ensemble`` scoring surface — docs/api.md). The pre-runner
+``distributed_cnn_elm``/``evaluate``/``kappa`` shims are GONE — see the
+migration table in docs/api.md.
 
-Both paths reshuffle per epoch from one rng stream per member (epoch e =
-the (e+1)-th permutation of ``default_rng(seed)`` — see
-``data.partition``), replacing the earlier replay-the-same-permutation
-behaviour.
-
-This module is the ENGINE; the supported entry point is
-``repro.core.runner`` (``MapConfig``/``ReduceConfig``/``AveragingRun`` +
-the batched ``Ensemble`` scoring surface — docs/api.md). The old
-``distributed_cnn_elm``/``evaluate``/``kappa`` entries below are
-deprecation shims forwarding there.
+Both Map paths reshuffle per epoch from one rng stream per member (epoch
+e = the (e+1)-th permutation of ``default_rng(seed)`` — see
+``data.partition``).
 """
 from __future__ import annotations
 
 import functools
-import warnings
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -60,12 +54,9 @@ import numpy as np
 
 from repro.core import elm
 from repro.core.averaging import (average_member_dim, average_trees,
-                                  broadcast_member_dim,
                                   weighted_average_trees)
-from repro.data.partition import (Partition, batches, chunk_scan_major,
-                                  padded_stacked_epoch_batches)
+from repro.data.partition import Partition, batches
 from repro.data.synthetic import one_hot
-from repro.distributed import sharding
 from repro.kernels import resolve_use_pallas
 from repro.models import cnn
 
@@ -172,21 +163,30 @@ class StackedMembers:
         return CNNELMModel(avg_cnn, avg_beta)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "solve_each_batch", "use_pallas",
-                                    "masked"),
-                   donate_argnames=("params_k", "stats_k"))
-def _stacked_epoch(cfg, params_k, stats_k, xb, tb, mb, lr, *,
-                   solve_each_batch: bool, use_pallas: bool, masked: bool):
-    """One epoch chunk for ALL members in ONE device dispatch.
+def stack_models(models: Sequence[CNNELMModel]) -> StackedMembers:
+    """Host-level models -> the stacked member layout (leaves gain a
+    leading k dim) so they can ride the batched scoring surface."""
+    cnn_k = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[m.cnn_params for m in models])
+    beta_k = jnp.stack([jnp.asarray(m.beta) for m in models])
+    return StackedMembers(cnn_k, beta_k)
+
+
+def stacked_epoch_scan(cfg, params_k, stats_k, xb, tb, mb, lr, *,
+                       solve_each_batch: bool, use_pallas: bool,
+                       masked: bool):
+    """THE stacked scan body: one epoch chunk for ALL members in one
+    program. Pure — the executors decide how it is dispatched
+    (``_stacked_epoch`` jits it whole-mesh; ``executor._mesh_epoch``
+    shard_maps it over the 'pod' axis so each device scans only its local
+    member slice — the body is identical, so equivalence is structural).
 
     xb: (nb, k, B, H, W[, C]) batches, tb: (nb, k, B, C) one-hot targets,
     mb: (nb, k) per-batch validity (1 = real, 0 = padding) — scan over nb,
-    vmap over k. The carry (params, stats) is donated so each chunk updates
-    buffers in place. Per batch and member this replays Algorithm 2
-    lines 9-14 exactly: accumulate stats, solve β from the running sums (one
-    Cholesky factor, reused for the solve), SGD on the ELM least-squares
-    error. With ``masked`` (static) a zero-mask batch contributes nothing to
+    vmap over k. Per batch and member this replays Algorithm 2 lines 9-14
+    exactly: accumulate stats, solve β from the running sums (one Cholesky
+    factor, reused for the solve), SGD on the ELM least-squares error.
+    With ``masked`` (static) a zero-mask batch contributes nothing to
     U/V/n and leaves the params untouched, so members with fewer real
     batches coast through their padding bit-identically; ``masked=False``
     (all shards equal, no chunk padding) keeps the mask out of the compute
@@ -221,48 +221,12 @@ def _stacked_epoch(cfg, params_k, stats_k, xb, tb, mb, lr, *,
     return params_k, stats_k
 
 
-@jax.jit
-def _round_sync(params_k, weights):
-    """The inter-round sync as ONE fused device program: (weighted) mean
-    over the member dim, broadcast back as every member's next-round init —
-    the same step ``trainer.make_average_step`` builds for the multi-pod
-    mesh (one all-reduce when the member dim is sharded). Jitted so the
-    telemetry's one-dispatch-per-sync accounting is literal."""
-    k = jax.tree.leaves(params_k)[0].shape[0]
-    return broadcast_member_dim(
-        average_member_dim(params_k, weights=weights), k)
-
-
-def _epoch_scan_arrays(partitions, batch_size, rngs, num_classes,
-                       chunk_batches):
-    """Scan-major padded epoch arrays on the HOST: xb (nb, k, B, ...),
-    tb (nb, k, B, C) one-hot, mb (nb, k) validity, plus the chunk length
-    (nb itself when not chunking). ``rngs`` are the live per-member streams
-    — each call consumes one permutation per member, so the caller's epoch
-    loop advances them in lockstep with ``train_member``. nb is rounded up
-    to a chunk multiple so every chunk shares one fixed shape (= one jit
-    cache entry)."""
-    nb = max(len(p.x) // batch_size for p in partitions)
-    chunk, num_batches = nb, None
-    if chunk_batches is not None and 0 < chunk_batches < nb:
-        chunk = chunk_batches
-        num_batches = -(-nb // chunk) * chunk
-    xs, ys, mk = padded_stacked_epoch_batches(partitions, batch_size, rngs,
-                                              num_batches=num_batches)
-    tb = one_hot(ys.reshape(-1), num_classes).reshape(*ys.shape, num_classes)
-    return (np.swapaxes(xs, 0, 1), np.swapaxes(tb, 0, 1),
-            np.swapaxes(mk, 0, 1), chunk)
-
-
-def _put_chunk(chunk, mesh):
-    """Start the host→device transfer of one (xb, tb, mb) chunk. device_put
-    is async, so issuing chunk i+1 here while chunk i's scan runs double-
-    buffers the pipeline. With a mesh the member dim (axis 1 of every
-    scan-major array) lands on the 'pod' axis alongside the params."""
-    if mesh is None:
-        return jax.device_put(chunk)
-    return jax.device_put(
-        chunk, sharding.stacked_batch_shardings(chunk, mesh, member_axis=1))
+# the single-device dispatch of the scan body: whole member dim in one jit,
+# carry donated so each chunk updates buffers in place
+_stacked_epoch = functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "solve_each_batch", "use_pallas", "masked"),
+    donate_argnames=("params_k", "stats_k"))(stacked_epoch_scan)
 
 
 def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
@@ -273,114 +237,31 @@ def train_members_stacked(cfg, init_params, partitions: Sequence[Partition],
                           chunk_batches: Optional[int] = None,
                           rounds: int = 1,
                           round_weights: Optional[Sequence[float]] = None,
-                          on_round: Optional[Callable] = None,
+                          on_round=None,
                           telemetry: Optional[dict] = None) -> StackedMembers:
-    """Algorithm 2 Map phase, vectorised: k members trained as one stacked
-    program. Matches ``train_member(..., seed=seed_base + i)`` per member
-    (same init, same per-epoch batch order, same update sequence) for ANY
-    partition sizes — unequal shards are padded to the max batch count and
-    masked out (see ``_stacked_epoch``). ``chunk_batches`` caps how many
-    batch steps are resident on device at once: the epoch streams as
-    double-buffered host→device chunks, one scan dispatch per chunk,
-    bit-identical to the monolithic scan. ``mesh`` optionally places the
-    member dim on the 'pod' mesh axis (see
-    ``sharding.member_dim_shardings``); the scan then runs SPMD across
-    pods.
+    """Engine-level veneer over ``executor.StackedExecutor`` — the
+    orchestration (round loop, chunk pipeline, telemetry) lives there now;
+    this keeps the historical signature for direct engine callers.
 
-    ``rounds`` is the multi-round (parallel-SGD) contract: the ``epochs``
-    SGD epochs split into ``rounds`` contiguous blocks and after every
-    non-final block the members are synchronised to
-    ``broadcast_member_dim(average_member_dim(params, round_weights), k)``
-    — the same step ``trainer.make_average_step`` lowers for the multi-pod
-    mesh. ``rounds=1`` is the paper's single final average and is
-    bit-identical to the pre-rounds behaviour. The per-member rng streams
-    and the lr schedule run over GLOBAL epoch indices, uninterrupted by
-    round boundaries. ``on_round(r, snapshot)`` is called after each
-    round's epochs AND its sync bookkeeping with the round index and a
-    cached zero-arg ``snapshot()`` returning the pre-sync
-    ``StackedMembers`` (β solved from that round's final-epoch stats on
-    first call — rounds whose snapshot is never taken skip the Cholesky);
-    ``telemetry`` counts scan dispatches / β solves / round syncs, with
-    each round's sync attributed to that round."""
-    if chunk_batches is not None and chunk_batches < 1:
-        raise ValueError(f"chunk_batches must be >= 1, got {chunk_batches}")
-    if rounds < 1:
-        raise ValueError(f"rounds must be >= 1, got {rounds}")
-    if rounds > 1 and epochs == 0:
-        raise ValueError("rounds > 1 needs SGD epochs to interleave with "
-                         "averaging; epochs=0 is the single closed-form pass")
-    if rounds > 1 and epochs % rounds:
-        raise ValueError(f"epochs ({epochs}) must split evenly into rounds "
-                         f"({rounds})")
-    k = len(partitions)
-    F, C = cnn.feature_dim(cfg), cfg.num_classes
-    use_pallas = resolve_use_pallas(use_pallas)
-    # live per-member streams: each epoch's builder call draws the next
-    # permutation (mirrors train_member's stream, no epoch replay)
-    rngs = [np.random.default_rng(seed_base + i) for i in range(k)]
-
-    params_k = broadcast_member_dim(init_params, k)
-    if mesh is not None:
-        params_k = jax.device_put(
-            params_k, sharding.member_dim_shardings(params_k, mesh))
-
-    per_round = epochs // rounds
-    round_passes = [[(False, 0.0)]] if epochs == 0 else [
-        [(True, float(lr_schedule(r * per_round + e)))
-         for e in range(per_round)] for r in range(rounds)]
-    sm = None
-    for r, passes in enumerate(round_passes):
-        stats_k = None
-        for solve_each_batch, lr in passes:
-            xb, tb, mb, chunk = _epoch_scan_arrays(partitions, batch_size,
-                                                   rngs, C, chunk_batches)
-            masked = bool(np.any(mb == 0.0))
-            stats_k = elm.zero_stats_stacked(k, F, C)
-            if mesh is not None:
-                stats_k = jax.device_put(
-                    stats_k, sharding.member_dim_shardings(stats_k, mesh))
-            chunks = chunk_scan_major((xb, tb, mb), chunk)
-            lr_dev = jnp.asarray(lr, jnp.float32)
-            nxt = _put_chunk(chunks[0], mesh)
-            for i in range(len(chunks)):
-                cur, nxt = nxt, (_put_chunk(chunks[i + 1], mesh)
-                                 if i + 1 < len(chunks) else None)
-                params_k, stats_k = _stacked_epoch(
-                    cfg, params_k, stats_k, *cur, lr_dev,
-                    solve_each_batch=solve_each_batch, use_pallas=use_pallas,
-                    masked=masked)
-                _bump(telemetry)
-        last = r == len(round_passes) - 1
-
-        def snapshot(pk=params_k, sk=stats_k, cache={}):
-            # lazy + cached: the batched Cholesky solve only runs for
-            # rounds whose snapshot somebody actually takes (the final
-            # round always; intermediate ones only under a hook). The
-            # default args pin this round's pre-sync state.
-            if "sm" not in cache:
-                _bump(telemetry)
-                cache["sm"] = StackedMembers(
-                    pk, elm.solve_beta(sk, cfg.elm_lambda))
-            return cache["sm"]
-
-        if last:
-            sm = snapshot()
-        else:
-            params_k = _round_sync(
-                params_k,
-                None if round_weights is None
-                else jnp.asarray(round_weights, jnp.float32))
-            if mesh is not None:
-                params_k = jax.device_put(
-                    params_k, sharding.member_dim_shardings(params_k, mesh))
-            # the sync is a device dispatch too — counted toward the total
-            # AND tallied separately, before on_round closes this round's
-            # books, so per-round telemetry prices each round's own sync
-            _bump(telemetry)
-            _bump(telemetry, key="round_syncs")
-        if on_round is not None:
-            on_round(r, snapshot)
-    return sm
+    Matches ``train_member(..., seed=seed_base + i)`` per member (same
+    init, same per-epoch batch order, same update sequence) for ANY
+    partition sizes. ``rounds``/``round_weights`` interleave the epochs
+    with (weighted) average+broadcast syncs; ``on_round(r, snapshot)`` is
+    called per round with a lazy cached ``snapshot()`` returning the
+    pre-sync ``StackedMembers``. ``mesh`` places the member dim via
+    ``sharding.member_dim_shardings`` under implicit GSPMD — for the
+    explicit shard_map path use ``executor.MeshExecutor`` (runner backend
+    ``"mesh"``)."""
+    from repro.core.executor import ExecutionPlan, StackedExecutor
+    plan = ExecutionPlan(
+        epochs=epochs, lr_schedule=lr_schedule, batch_size=batch_size,
+        seed=seed_base, use_pallas=use_pallas, chunk_batches=chunk_batches,
+        rounds=rounds, reduce_weights=round_weights,
+        on_round=None if on_round is None else
+        (lambda r, snapshot, averaged: on_round(r, snapshot)),
+        telemetry=telemetry)
+    return StackedExecutor(mesh=mesh).execute(
+        cfg, init_params, partitions, plan).stacked
 
 
 def average_models(models: Sequence[CNNELMModel],
@@ -398,58 +279,3 @@ def average_models(models: Sequence[CNNELMModel],
     avg_cnn = average_trees([m.cnn_params for m in models])
     avg_beta = average_trees([m.beta for m in models])
     return CNNELMModel(avg_cnn, avg_beta)
-
-
-def distributed_cnn_elm(cfg, partitions: List[Partition], key, *,
-                        epochs: int, lr_schedule, batch_size: int,
-                        stacked: bool = False,
-                        use_pallas: Optional[bool] = None,
-                        mesh=None, weight_by_shard: bool = False,
-                        chunk_batches: Optional[int] = None):
-    """DEPRECATED shim — use ``repro.core.runner.AveragingRun``.
-
-    The 8-kwarg entry point is preserved verbatim for old callers; it
-    forwards to the composable runner (``MapConfig`` carries the Map
-    concerns, ``ReduceConfig`` the Reduce strategy) and returns the same
-    ``(members, averaged)`` pair, same numerics, same seeds."""
-    warnings.warn(
-        "distributed_cnn_elm is deprecated; use repro.core.runner."
-        "AveragingRun(cfg, MapConfig(...), ReduceConfig(...)).run(...)",
-        DeprecationWarning, stacklevel=2)
-    from repro.core import runner
-    res = runner.AveragingRun(
-        cfg,
-        runner.MapConfig(epochs=epochs, lr_schedule=lr_schedule,
-                         batch_size=batch_size,
-                         backend="stacked" if stacked else "sequential",
-                         use_pallas=use_pallas, mesh=mesh,
-                         chunk_batches=chunk_batches),
-        runner.ReduceConfig(
-            strategy="shard_weighted" if weight_by_shard else "uniform"),
-    ).run(partitions, key)
-    return res.members, res.averaged
-
-
-def evaluate(cfg, model: CNNELMModel, x: np.ndarray, y: np.ndarray,
-             batch_size: int = 512,
-             use_pallas: Optional[bool] = None) -> float:
-    """DEPRECATED shim — use ``repro.core.runner.evaluate_model`` (or an
-    ``Ensemble`` for many models: one batched dispatch per eval batch)."""
-    warnings.warn("cnn_elm.evaluate is deprecated; use repro.core.runner."
-                  "evaluate_model or runner.Ensemble.evaluate",
-                  DeprecationWarning, stacklevel=2)
-    from repro.core import runner
-    return runner.evaluate_model(cfg, model, x, y, batch_size=batch_size,
-                                 use_pallas=use_pallas)
-
-
-def kappa(cfg, model: CNNELMModel, x, y, batch_size: int = 512,
-          use_pallas: Optional[bool] = None):
-    """DEPRECATED shim — use ``repro.core.runner.kappa_model`` (or an
-    ``Ensemble`` for many models)."""
-    warnings.warn("cnn_elm.kappa is deprecated; use repro.core.runner."
-                  "kappa_model or runner.Ensemble.kappa",
-                  DeprecationWarning, stacklevel=2)
-    from repro.core import runner
-    return runner.kappa_model(cfg, model, x, y, batch_size=batch_size,
-                              use_pallas=use_pallas)

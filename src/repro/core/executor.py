@@ -1,0 +1,583 @@
+"""The Map-phase execution layer — how Algorithm 2's k members actually run.
+
+``repro.core.cnn_elm`` owns the MATH (the per-batch step, the stacked scan
+body, the β solve); this module owns the ORCHESTRATION: the epoch/round
+loop, host→device chunk pipelining, telemetry, inter-round syncs and the
+Reduce. The runner (``repro.core.runner``) selects an executor by name:
+
+* ``SequentialExecutor`` (``backend="sequential"``) — the faithful
+  reference: a host Python loop over ``cnn_elm.train_member``, three jit
+  dispatches per batch per member.
+* ``StackedExecutor`` (``backend="stacked"``) — the single-device fast
+  path: all k members stacked on a leading member dim, one donated
+  vmap+scan dispatch per epoch chunk. An optional ``mesh`` places the
+  member dim via ``sharding.member_dim_shardings`` and lets GSPMD
+  partition the program implicitly.
+* ``MeshExecutor`` (``backend="mesh"``) — the multi-pod path: the SAME
+  stacked scan body, explicitly ``shard_map``-ed over the ``'pod'`` axis
+  of a ``jax.sharding.Mesh``. Members are sharded via
+  ``sharding.member_dim_shardings`` (pad-and-mask when k doesn't divide
+  the pod count — see below), epoch chunks land member-sharded via
+  ``sharding.stacked_batch_shardings``, the epoch scan contains ZERO
+  collectives, the β Cholesky solve runs pod-sharded
+  (each device factorises only its local members), and the Reduce — final
+  average AND every ``rounds=r`` inter-round sync — is ONE in-mesh
+  all-reduce (``averaging.psum_weighted_mean_members``: local weighted
+  partial sums raveled flat, a single ``psum``, unravel + normalise).
+
+Member padding (MeshExecutor): k members on a p-pod mesh are padded to
+``k_pad = ceil(k/p)·p`` — this covers both a mesh larger than k (every pod
+still holds ≥1 member slot) and k not divisible by p. Padded members carry
+zero batches with a zero validity mask (they never update and accumulate
+zero stats) and weight 0 in every Reduce, so they are arithmetically
+invisible; the final snapshot strips them. Simulate pods on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+``repro.launch.mesh.force_host_device_count`` / ``REPRO_HOST_DEVICES``).
+
+Telemetry contract (a plain dict, shared with the runner's ``RunResult``):
+``dispatches`` counts every device program the executor launches (epoch
+chunks, β solves, syncs); ``round_syncs`` the inter-round average+broadcast
+programs; ``reduce_dispatches`` (mesh only) the one-collective Reduce
+programs behind each ``averaged()``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                               # jax >= 0.5
+    from jax import shard_map
+except ImportError:                # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import elm
+from repro.core.averaging import (average_member_dim, broadcast_member_dim,
+                                  psum_weighted_mean_members)
+from repro.core.cnn_elm import (CNNELMModel, StackedMembers, _bump,
+                                average_models, stack_models,
+                                stacked_epoch_scan, train_member,
+                                _stacked_epoch)
+from repro.core.e2lm import psum_stats
+from repro.data.partition import chunk_scan_major, padded_stacked_epoch_batches
+from repro.data.synthetic import one_hot
+from repro.distributed import sharding
+from repro.kernels import resolve_use_pallas
+from repro.models import cnn
+
+BACKENDS = ("sequential", "stacked", "mesh")
+
+
+# ---------------------------------------------------------------------------
+# Plan + outcome
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything one Map/Reduce execution needs, backend-agnostic.
+
+    ``on_round(r, snapshot, averaged)`` fires after each round's epochs AND
+    its sync bookkeeping with two lazy, cached zero-arg closures:
+    ``snapshot()`` → the round's pre-sync ``StackedMembers`` (β solved on
+    first call — rounds nobody snapshots skip the Cholesky), ``averaged()``
+    → the round's (weighted) averaged ``CNNELMModel`` via the executor's
+    native Reduce (host mean / member-dim mean / one in-mesh all-reduce).
+    ``reduce_weights`` drive BOTH the inter-round syncs and ``averaged()``.
+    """
+    epochs: int = 0
+    lr_schedule: Optional[Callable[[int], float]] = None
+    batch_size: int = 32
+    seed: int = 1000                 # member i's stream = default_rng(seed+i)
+    use_pallas: Optional[bool] = None
+    chunk_batches: Optional[int] = None
+    rounds: int = 1
+    reduce_weights: Optional[Sequence[float]] = None
+    on_round: Optional[Callable] = None
+    telemetry: Optional[dict] = None
+
+
+@dataclass
+class MapOutcome:
+    """What an executor hands back: the k trained members, plus the live
+    ``StackedMembers`` on the stacked layouts (None on sequential)."""
+    members: List[CNNELMModel]
+    stacked: Optional[StackedMembers]
+
+
+def make_executor(backend: str, mesh=None) -> "Executor":
+    """Executor registry: ``backend`` ∈ ``BACKENDS``. ``mesh`` is the
+    placement mesh (required axis ``'pod'`` for ``"mesh"``; optional GSPMD
+    hint for ``"stacked"``; ignored by ``"sequential"``)."""
+    if backend == "sequential":
+        return SequentialExecutor()
+    if backend == "stacked":
+        return StackedExecutor(mesh=mesh)
+    if backend == "mesh":
+        return MeshExecutor(mesh=mesh)
+    raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sequential: the faithful host-loop reference
+# ---------------------------------------------------------------------------
+
+class SequentialExecutor:
+    """One ``cnn_elm.train_member`` host loop per member — the Algorithm 2
+    reference every fast path is tested against. No sync points between
+    members, so multi-round averaging is unsupported."""
+
+    name = "sequential"
+    supports_rounds = False
+
+    def execute(self, cfg, init_params, partitions, plan: ExecutionPlan
+                ) -> MapOutcome:
+        if plan.rounds > 1:
+            # direct-drive callers get the same guard the runner applies —
+            # silently running rounds=1 would misreport parallel-SGD runs
+            raise ValueError(
+                "rounds > 1 needs a stacked layout (StackedExecutor or "
+                "MeshExecutor) — the sequential reference has no sync "
+                "point between members")
+        members = [train_member(
+            cfg, init_params, p, epochs=plan.epochs,
+            lr_schedule=plan.lr_schedule, batch_size=plan.batch_size,
+            seed=plan.seed + i, use_pallas=plan.use_pallas,
+            telemetry=plan.telemetry) for i, p in enumerate(partitions)]
+        cache: dict = {}
+
+        def snapshot():
+            if "sm" not in cache:
+                cache["sm"] = stack_models(members)
+            return cache["sm"]
+
+        def averaged():
+            if "avg" not in cache:
+                cache["avg"] = average_models(members,
+                                              weights=plan.reduce_weights)
+            return cache["avg"]
+
+        if plan.on_round is not None:
+            plan.on_round(0, snapshot, averaged)
+        return MapOutcome(members, None)
+
+
+# ---------------------------------------------------------------------------
+# The shared stacked round/epoch loop (StackedExecutor + MeshExecutor)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _round_sync(params_k, weights):
+    """The single-device inter-round sync as ONE fused program: (weighted)
+    mean over the member dim, broadcast back as every member's next-round
+    init. Jitted so the one-dispatch-per-sync telemetry is literal."""
+    k = jax.tree.leaves(params_k)[0].shape[0]
+    return broadcast_member_dim(
+        average_member_dim(params_k, weights=weights), k)
+
+
+class _StackedBase:
+    """Round/epoch/chunk orchestration over the stacked member layout.
+
+    Subclasses fix the placement + dispatch details via hooks:
+    ``_place_params`` / ``_zero_stats`` (where the carry lives),
+    ``_pad_epoch`` (member-dim padding), ``_put_chunk`` (how batches reach
+    devices), ``_epoch_dispatch`` (plain jit vs shard_map), ``_solve``,
+    ``_snapshot``, ``_averaged`` and ``_sync``. The loop itself — round
+    blocks, per-epoch host array build, double-buffered chunk pipeline,
+    lazy snapshot/averaged closures, telemetry — is written once here.
+    """
+
+    supports_rounds = True
+
+    def execute(self, cfg, init_params, partitions, plan: ExecutionPlan
+                ) -> MapOutcome:
+        if plan.chunk_batches is not None and plan.chunk_batches < 1:
+            raise ValueError(
+                f"chunk_batches must be >= 1, got {plan.chunk_batches}")
+        if plan.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {plan.rounds}")
+        if plan.rounds > 1 and plan.epochs == 0:
+            raise ValueError(
+                "rounds > 1 needs SGD epochs to interleave with averaging; "
+                "epochs=0 is the single closed-form pass")
+        if plan.rounds > 1 and plan.epochs % plan.rounds:
+            raise ValueError(f"epochs ({plan.epochs}) must split evenly "
+                             f"into rounds ({plan.rounds})")
+        k = len(partitions)
+        F, C = cnn.feature_dim(cfg), cfg.num_classes
+        use_pallas = resolve_use_pallas(plan.use_pallas)
+        telemetry = plan.telemetry
+        self._begin(cfg, k)
+        # live per-member streams: each epoch's builder call draws the next
+        # permutation (mirrors train_member's stream, no epoch replay)
+        rngs = [np.random.default_rng(plan.seed + i) for i in range(k)]
+        params_k = self._place_params(init_params)
+
+        per_round = plan.epochs // plan.rounds
+        round_passes = [[(False, 0.0)]] if plan.epochs == 0 else [
+            [(True, float(plan.lr_schedule(r * per_round + e)))
+             for e in range(per_round)] for r in range(plan.rounds)]
+        sm = None
+        for r, passes in enumerate(round_passes):
+            stats_k = None
+            for solve_each_batch, lr in passes:
+                xb, tb, mb, chunk = self._epoch_arrays(
+                    partitions, plan.batch_size, rngs, C, plan.chunk_batches)
+                masked = bool(np.any(mb == 0.0))
+                stats_k = self._zero_stats(F, C)
+                chunks = chunk_scan_major((xb, tb, mb), chunk)
+                lr_dev = jnp.asarray(lr, jnp.float32)
+                nxt = self._put_chunk(chunks[0])
+                for i in range(len(chunks)):
+                    cur, nxt = nxt, (self._put_chunk(chunks[i + 1])
+                                     if i + 1 < len(chunks) else None)
+                    params_k, stats_k = self._epoch_dispatch(
+                        cfg, params_k, stats_k, cur, lr_dev,
+                        solve_each_batch, use_pallas, masked)
+                    _bump(telemetry)
+            last = r == len(round_passes) - 1
+            snapshot, averaged = self._round_closures(
+                cfg, params_k, stats_k, plan.reduce_weights, telemetry)
+            if last:
+                sm = snapshot()
+            else:
+                params_k = self._sync(params_k, plan.reduce_weights)
+                # the sync is a device dispatch too — counted toward the
+                # total AND tallied separately, before on_round closes this
+                # round's books, so per-round telemetry prices its own sync
+                _bump(telemetry)
+                _bump(telemetry, key="round_syncs")
+            if plan.on_round is not None:
+                plan.on_round(r, snapshot, averaged)
+        return MapOutcome(sm.unstack(), sm)
+
+    def _round_closures(self, cfg, params_k, stats_k, weights, telemetry):
+        """Lazy, cached snapshot/averaged over THIS round's pre-sync state.
+        The β solve is shared between them and only runs if somebody asks
+        (the final round always; intermediate rounds only under a hook)."""
+        cache: dict = {}
+
+        def solved_beta():
+            if "beta" not in cache:
+                _bump(telemetry)
+                cache["beta"] = self._solve(cfg, stats_k)
+            return cache["beta"]
+
+        def snapshot():
+            if "sm" not in cache:
+                cache["sm"] = self._snapshot(params_k, solved_beta())
+            return cache["sm"]
+
+        def averaged():
+            if "avg" not in cache:
+                cache["avg"] = self._averaged(params_k, solved_beta(),
+                                              weights, telemetry)
+            return cache["avg"]
+
+        return snapshot, averaged
+
+    # ---- shared host-side epoch building --------------------------------
+
+    def _epoch_arrays(self, partitions, batch_size, rngs, num_classes,
+                      chunk_batches):
+        """Scan-major padded epoch arrays on the HOST: xb (nb, k, B, ...),
+        tb (nb, k, B, C) one-hot, mb (nb, k) validity, plus the chunk
+        length (nb itself when not chunking). Each call consumes one
+        permutation per member stream. nb is rounded up to a chunk multiple
+        so every chunk shares one fixed shape (= one jit cache entry)."""
+        nb = max(len(p.x) // batch_size for p in partitions)
+        chunk, num_batches = nb, None
+        if chunk_batches is not None and 0 < chunk_batches < nb:
+            chunk = chunk_batches
+            num_batches = -(-nb // chunk) * chunk
+        xs, ys, mk = padded_stacked_epoch_batches(partitions, batch_size,
+                                                  rngs,
+                                                  num_batches=num_batches)
+        tb = one_hot(ys.reshape(-1),
+                     num_classes).reshape(*ys.shape, num_classes)
+        xb, tb, mk = (np.swapaxes(a, 0, 1) for a in (xs, tb, mk))
+        return self._pad_epoch(xb, tb, mk) + (chunk,)
+
+    # ---- backend hooks ---------------------------------------------------
+
+    def _begin(self, cfg, k):
+        """Per-run setup (member counts, mesh checks)."""
+
+    def _pad_epoch(self, xb, tb, mb):
+        return xb, tb, mb
+
+
+class StackedExecutor(_StackedBase):
+    """Today's single-device fast path: one donated vmap+scan jit dispatch
+    per epoch chunk (``cnn_elm._stacked_epoch``). An optional ``mesh``
+    device_puts the member dim via ``sharding.member_dim_shardings`` and
+    leaves the partitioning to GSPMD — the implicit-SPMD variant;
+    ``MeshExecutor`` is the explicit shard_map one."""
+
+    name = "stacked"
+
+    def __init__(self, mesh=None):
+        self.mesh = mesh
+
+    def _begin(self, cfg, k):
+        self._k = k
+
+    def _place_params(self, init_params):
+        params_k = broadcast_member_dim(init_params, self._k)
+        if self.mesh is not None:
+            params_k = jax.device_put(
+                params_k, sharding.member_dim_shardings(params_k, self.mesh))
+        return params_k
+
+    def _zero_stats(self, F, C):
+        stats_k = elm.zero_stats_stacked(self._k, F, C)
+        if self.mesh is not None:
+            stats_k = jax.device_put(
+                stats_k, sharding.member_dim_shardings(stats_k, self.mesh))
+        return stats_k
+
+    def _put_chunk(self, chunk):
+        # device_put is async: issuing chunk i+1 while chunk i scans
+        # double-buffers the host→device pipeline
+        if self.mesh is None:
+            return jax.device_put(chunk)
+        return jax.device_put(chunk, sharding.stacked_batch_shardings(
+            chunk, self.mesh, member_axis=1))
+
+    def _epoch_dispatch(self, cfg, params_k, stats_k, cur, lr,
+                        solve_each_batch, use_pallas, masked):
+        return _stacked_epoch(cfg, params_k, stats_k, *cur, lr,
+                              solve_each_batch=solve_each_batch,
+                              use_pallas=use_pallas, masked=masked)
+
+    def _solve(self, cfg, stats_k):
+        return elm.solve_beta(stats_k, cfg.elm_lambda)
+
+    def _snapshot(self, params_k, beta_k):
+        return StackedMembers(params_k, beta_k)
+
+    def _averaged(self, params_k, beta_k, weights, telemetry):
+        avg_cnn, avg_beta = average_member_dim((params_k, beta_k),
+                                               weights=weights)
+        return CNNELMModel(avg_cnn, avg_beta)
+
+    def _sync(self, params_k, weights):
+        params_k = _round_sync(
+            params_k,
+            None if weights is None else jnp.asarray(weights, jnp.float32))
+        if self.mesh is not None:
+            params_k = jax.device_put(
+                params_k, sharding.member_dim_shardings(params_k, self.mesh))
+        return params_k
+
+
+# ---------------------------------------------------------------------------
+# MeshExecutor: explicit shard_map over the 'pod' axis
+# ---------------------------------------------------------------------------
+
+def _member_specs(tree, mesh):
+    """shard_map specs for member-stacked arrays — the spec twin of the
+    ``member_dim_shardings`` placement contract (inside MeshExecutor the
+    member count is always padded to a pod multiple, so the resolver's
+    replication fallback never fires)."""
+    return sharding.member_dim_specs(tree, mesh)
+
+
+def _replicated_specs(tree):
+    return jax.tree.map(lambda a: P(*([None] * a.ndim)), tree)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "solve_each_batch",
+                                             "use_pallas", "masked"),
+                   donate_argnames=("params_k", "stats_k"))
+def _mesh_epoch(cfg, mesh, params_k, stats_k, xb, tb, mb, lr, *,
+                solve_each_batch: bool, use_pallas: bool, masked: bool):
+    """One epoch chunk shard_map-ed over 'pod': each pod scans ONLY its
+    local members — the identical ``cnn_elm.stacked_epoch_scan`` body on a
+    k/p-member slice, ZERO collectives (members are independent until the
+    Reduce). The donated carry keeps params/stats resident and sharded."""
+    pspecs = _member_specs(params_k, mesh)
+    sspecs = _member_specs(stats_k, mesh)
+    bspecs = sharding.stacked_batch_specs((xb, tb, mb), mesh, member_axis=1)
+
+    def local(p, s, x, t, m, lr_):
+        return stacked_epoch_scan(cfg, p, s, x, t, m, lr_,
+                                  solve_each_batch=solve_each_batch,
+                                  use_pallas=use_pallas, masked=masked)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspecs, sspecs) + bspecs + (P(),),
+                     out_specs=(pspecs, sspecs))(
+        params_k, stats_k, xb, tb, mb, lr)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "lam"))
+def _mesh_solve(mesh, stats_k, lam):
+    """β for every member, pod-sharded: each device Cholesky-factorises only
+    its local (k/p, F, F) stats — the solve never gathers; only the final
+    snapshot (or the one-collective Reduce) leaves the mesh."""
+    def local(s):
+        return elm.solve_beta(s, lam)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(_member_specs(stats_k, mesh),),
+                     out_specs=P("pod", None, None))(stats_k)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _mesh_reduce(mesh, tree, weights):
+    """The Reduce as ONE in-mesh all-reduce: weighted mean over the global
+    member dim via ``psum_weighted_mean_members`` (flat psum), replicated
+    output. ``weights`` is the full padded member-weight vector — zeros
+    drop padded members exactly."""
+    def local(t, w):
+        return psum_weighted_mean_members(t, w, "pod")
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(_member_specs(tree, mesh), P("pod")),
+                     out_specs=_replicated_specs(
+                         jax.tree.map(lambda a: a[0], tree)))(tree, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _mesh_sync(mesh, params_k, weights):
+    """The inter-round sync, still ONE all-reduce: the same flat-psum
+    weighted mean, broadcast straight back to the local member slots —
+    params never leave the mesh between rounds. NOT donated: the round's
+    lazy snapshot/averaged closures may still read the pre-sync params
+    after the sync fires (same contract as ``_round_sync``)."""
+    pspecs = _member_specs(params_k, mesh)
+
+    def local(p, w):
+        avg = psum_weighted_mean_members(p, w, "pod")
+        k_local = jax.tree.leaves(p)[0].shape[0]
+        return broadcast_member_dim(avg, k_local)
+
+    return shard_map(local, mesh=mesh, in_specs=(pspecs, P("pod")),
+                     out_specs=pspecs)(params_k, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "lam"))
+def _mesh_e2lm_beta(mesh, stats_k, lam):
+    """E²LM cross-member Reduce (``e2lm.psum_stats``): sum every member's
+    sufficient statistics over the mesh and solve ONE global β — the exact
+    no-partition ELM readout, computed from the Map phase's stats without
+    ever gathering them. Padded members hold zero stats, so they vanish
+    from the sums by construction."""
+    def local(s):
+        loc = type(s)(s.u.sum(0), s.v.sum(0), s.n.sum(0))
+        return elm.solve_beta(psum_stats(loc, "pod"), lam)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(_member_specs(stats_k, mesh),),
+                     out_specs=P(None, None))(stats_k)
+
+
+class MeshExecutor(_StackedBase):
+    """The multi-pod Map phase: stacked scan body shard_map-ed over 'pod'.
+
+    ``mesh`` must carry a ``'pod'`` axis (default: a 1-D ``('pod',)`` mesh
+    over every visible device — ``repro.launch.mesh.make_member_mesh``).
+    Members pad to a pod-count multiple (zero data, zero mask, zero Reduce
+    weight — arithmetically invisible, stripped from the snapshot). The
+    per-round cost model: epochs/rounds scan dispatches with zero
+    collectives, then exactly ONE all-reduce for the sync (or the final
+    Reduce). See docs/perf.md §Mesh scaling."""
+
+    name = "mesh"
+
+    def __init__(self, mesh=None):
+        self.mesh = mesh
+
+    def _begin(self, cfg, k):
+        if self.mesh is None:
+            n = len(jax.devices())
+            self.mesh = jax.make_mesh((n,), ("pod",))
+        if "pod" not in self.mesh.shape:
+            raise ValueError(
+                f"MeshExecutor needs a mesh with a 'pod' axis, got axes "
+                f"{tuple(self.mesh.shape)}")
+        self._cfg = cfg
+        self._k = k
+        pods = self.mesh.shape["pod"]
+        self._k_pad = -(-k // pods) * pods      # ceil to a pod multiple
+        spec = sharding.resolve_spec((self._k_pad,), ("member",), self.mesh)
+        if spec[0] is None:      # padding guarantees divisibility, so the
+            raise ValueError(    # fallback can only mean bad custom rules
+                f"'member' did not resolve to a mesh axis for k_pad="
+                f"{self._k_pad} on mesh {dict(self.mesh.shape)}")
+        # the padded member-weight template: uniform weight 1 on real
+        # members, 0 on padding (explicit weights overwrite the prefix)
+        self._member_mask = np.array([1.0] * k + [0.0] * (self._k_pad - k),
+                                     np.float32)
+
+    def _weights_dev(self, weights):
+        w = self._member_mask.copy()
+        if weights is not None:
+            w[:self._k] = np.asarray(weights, np.float32)
+        return jax.device_put(jnp.asarray(w),
+                              NamedSharding(self.mesh, P("pod")))
+
+    def _place_params(self, init_params):
+        params_k = broadcast_member_dim(init_params, self._k_pad)
+        return jax.device_put(
+            params_k, sharding.member_dim_shardings(params_k, self.mesh))
+
+    def _zero_stats(self, F, C):
+        stats_k = elm.zero_stats_stacked(self._k_pad, F, C)
+        return jax.device_put(
+            stats_k, sharding.member_dim_shardings(stats_k, self.mesh))
+
+    def _pad_epoch(self, xb, tb, mb):
+        pad = self._k_pad - self._k
+        if pad:
+            z = lambda a: np.concatenate(
+                [a, np.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)],
+                axis=1)
+            xb, tb, mb = z(xb), z(tb), z(mb)
+        return xb, tb, mb
+
+    def _put_chunk(self, chunk):
+        return jax.device_put(chunk, sharding.stacked_batch_shardings(
+            chunk, self.mesh, member_axis=1))
+
+    def _epoch_dispatch(self, cfg, params_k, stats_k, cur, lr,
+                        solve_each_batch, use_pallas, masked):
+        return _mesh_epoch(cfg, self.mesh, params_k, stats_k, *cur, lr,
+                           solve_each_batch=solve_each_batch,
+                           use_pallas=use_pallas, masked=masked)
+
+    def _solve(self, cfg, stats_k):
+        self._last_stats = stats_k          # for e2lm_global_beta
+        return _mesh_solve(self.mesh, stats_k, cfg.elm_lambda)
+
+    def _snapshot(self, params_k, beta_k):
+        """The final UNSHARDED snapshot: gather off-mesh, strip the padded
+        member slots — the only point where member arrays leave the mesh."""
+        take = lambda a: jnp.asarray(np.asarray(a)[:self._k])
+        return StackedMembers(jax.tree.map(take, params_k), take(beta_k))
+
+    def _averaged(self, params_k, beta_k, weights, telemetry):
+        _bump(telemetry)
+        _bump(telemetry, key="reduce_dispatches")
+        avg_cnn, avg_beta = _mesh_reduce(self.mesh, (params_k, beta_k),
+                                         self._weights_dev(weights))
+        return CNNELMModel(avg_cnn, avg_beta)
+
+    def _sync(self, params_k, weights):
+        return _mesh_sync(self.mesh, params_k, self._weights_dev(weights))
+
+    def e2lm_global_beta(self):
+        """After ``execute``: the E²LM global readout — ONE
+        ``e2lm.psum_stats`` reduce of every member's final-epoch stats,
+        solved into the single β a no-partition ELM would produce."""
+        if not hasattr(self, "_last_stats"):
+            raise RuntimeError("e2lm_global_beta needs a completed execute()"
+                               " (the final-round solve records the stats)")
+        return _mesh_e2lm_beta(self.mesh, self._last_stats,
+                               self._cfg.elm_lambda)

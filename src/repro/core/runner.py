@@ -2,9 +2,12 @@
 config objects instead of one 8-kwarg entry point.
 
 * ``MapConfig``    — everything the Map phase needs: epochs, lr schedule,
-                     batch size, backend (``"sequential"`` host loop or the
-                     ``"stacked"`` vmap+scan fast path), kernel backend,
-                     mesh placement, chunking, and THE member seed rule.
+                     batch size, backend (an ``executor`` name:
+                     ``"sequential"`` host loop, ``"stacked"`` vmap+scan
+                     fast path, or ``"mesh"`` — the stacked body
+                     shard_map-ed over a device mesh's 'pod' axis with a
+                     one-all-reduce Reduce), kernel backend, mesh
+                     placement, chunking, and THE member seed rule.
 * ``ReduceConfig`` — the Reduce strategy (uniform / shard-weighted /
                      explicit weights) and ``rounds``: ``rounds > 1``
                      interleaves Map epochs with
@@ -30,8 +33,11 @@ permutations from ``np.random.default_rng(MapConfig.seed + i)`` — see
 so backend equivalence is by-construction (``MapConfig.seed`` defaults to
 the historical 1000).
 
-``cnn_elm.distributed_cnn_elm`` / ``evaluate`` / ``kappa`` survive as thin
-deprecation shims forwarding here.
+The execution layer behind ``MapConfig.backend`` lives in
+``repro.core.executor`` (the pre-runner ``distributed_cnn_elm`` /
+``evaluate`` / ``kappa`` shims are gone — docs/api.md has the migration
+table; ``evaluate_model``/``kappa_model`` below are the single-model
+entries).
 """
 from __future__ import annotations
 
@@ -44,14 +50,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cnn_elm, elm
-from repro.core.averaging import average_member_dim
-from repro.core.cnn_elm import CNNELMModel, StackedMembers
+from repro.core import elm
+from repro.core.cnn_elm import (CNNELMModel, StackedMembers,  # noqa: F401
+                                stack_models)
+from repro.core.executor import BACKENDS, ExecutionPlan, make_executor
 from repro.data.partition import Partition
 from repro.kernels import resolve_use_pallas
 from repro.models import cnn
 
-BACKENDS = ("sequential", "stacked")
 STRATEGIES = ("uniform", "shard_weighted")
 COMBINES = ("mean", "vote")
 
@@ -64,12 +70,19 @@ COMBINES = ("mean", "vote")
 class MapConfig:
     """Map-phase configuration (Alg. 2 lines 4-17, one member per shard).
 
-    ``backend="sequential"`` is the faithful host-loop reference
+    ``backend`` names an ``executor`` implementation:
+    ``"sequential"`` — the faithful host-loop reference
     (``cnn_elm.train_member`` per member, 3 dispatches per batch);
-    ``"stacked"`` is the production path (all members vmapped into one
-    donated scan per epoch chunk). ``use_pallas`` forces the kernel backend
-    on EITHER path (None = auto policy); ``mesh``/``chunk_batches`` only
-    affect the stacked backend, matching the engine they configure."""
+    ``"stacked"`` — the single-device fast path (all members vmapped into
+    one donated scan per epoch chunk; ``mesh`` optionally hints GSPMD via
+    ``member_dim_shardings``); ``"mesh"`` — the multi-pod path (the same
+    scan body shard_map-ed over ``mesh``'s 'pod' axis, members padded to a
+    pod multiple when k doesn't divide it, β solved pod-sharded, Reduce
+    and every round sync ONE in-mesh all-reduce; ``mesh=None`` builds a
+    1-D ('pod',) mesh over every visible device). ``use_pallas`` forces
+    the kernel backend on ANY path (None = auto policy);
+    ``chunk_batches`` streams epochs as double-buffered chunks on the
+    stacked layouts."""
     epochs: int = 0
     lr_schedule: Optional[Callable[[int], float]] = None
     batch_size: int = 32
@@ -109,8 +122,9 @@ class ReduceConfig:
     ``rounds=1``: train all epochs, average once (paper-faithful).
     ``rounds=r>1``: epochs split into r contiguous blocks; after every
     non-final block the members sync to the (weighted) average — stacked
-    backend only, where the sync is one ``average_member_dim`` +
-    ``broadcast_member_dim`` (a single cross-pod all-reduce on a mesh)."""
+    layouts only (backend ``"stacked"``: one ``average_member_dim`` +
+    ``broadcast_member_dim`` program; backend ``"mesh"``: one in-mesh
+    all-reduce, params never leave the mesh between rounds)."""
     strategy: Union[str, Sequence[float]] = "uniform"
     rounds: int = 1
 
@@ -199,52 +213,31 @@ class AveragingRun:
         per-round eval surface (accuracy curves across communication
         rounds, early stopping, checkpointing, ...)."""
         m, rc = self.map_cfg, self.reduce_cfg
-        if rc.rounds > 1 and m.backend != "stacked":
-            raise ValueError("rounds > 1 requires MapConfig("
-                             "backend='stacked') — the sequential reference "
-                             "has no sync point between members")
+        executor = make_executor(m.backend, mesh=m.mesh)
+        if rc.rounds > 1 and not executor.supports_rounds:
+            raise ValueError("rounds > 1 requires MapConfig(backend="
+                             "'stacked') or 'mesh' — the sequential "
+                             "reference has no sync point between members")
         weights = rc.resolve_weights(partitions)
         init = cnn.init_params(self.cfg, key)
         telemetry: dict = {"dispatches": 0}
         records: List[RoundRecord] = []
         t0 = time.perf_counter()
-
-        if m.backend == "sequential":
-            members = [cnn_elm.train_member(
-                self.cfg, init, p, epochs=m.epochs,
-                lr_schedule=m.lr_schedule, batch_size=m.batch_size,
-                seed=m.member_seed(i), use_pallas=m.use_pallas,
-                telemetry=telemetry) for i, p in enumerate(partitions)]
-            averaged = cnn_elm.average_models(members, weights=weights)
-            # hook runs before the wall-time capture, matching the stacked
-            # backend's per-round accounting
-            hooked = round_hook(0, averaged) if round_hook else None
-            records.append(RoundRecord(
-                0, 0, m.epochs, time.perf_counter() - t0,
-                telemetry["dispatches"], hooked))
-            return RunResult(self.cfg, members, averaged, None, records,
-                             time.perf_counter() - t0,
-                             telemetry["dispatches"], m.backend)
-
         per_round = m.epochs // rc.rounds
         state = {"t": t0, "d": 0, "avg": None}
 
-        def on_round(r: int, snapshot):
-            # per-round Reduce on the stacked layout — the SAME
-            # average_member_dim(weights) the engine's inter-round sync
-            # applies, so the hook's averaged model is the model members
-            # were actually reset to (one all-reduce under a mesh).
-            # ``snapshot`` is lazy, so hook-less intermediate rounds never
-            # pay the β solve or the averaged-model build.
+        def on_round(r: int, snapshot, averaged):
+            # per-round Reduce through the EXECUTOR's native path (host
+            # mean / member-dim mean / one in-mesh all-reduce) with the
+            # same weights the inter-round sync applies, so the hook's
+            # averaged model is the model members were actually reset to.
+            # Both closures are lazy+cached: hook-less intermediate rounds
+            # never pay the β solve or the averaged-model build.
             hooked = None
             if round_hook is not None or r == rc.rounds - 1:
-                sm_r = snapshot()
-                avg_cnn, avg_beta = average_member_dim(
-                    (sm_r.cnn_params, sm_r.beta), weights=weights)
-                averaged_r = CNNELMModel(avg_cnn, avg_beta)
-                state["avg"] = averaged_r
+                state["avg"] = averaged()
                 if round_hook is not None:
-                    hooked = round_hook(r, averaged_r)
+                    hooked = round_hook(r, state["avg"])
             now = time.perf_counter()
             records.append(RoundRecord(
                 r, r * per_round, (r + 1) * per_round if m.epochs else 0,
@@ -252,13 +245,14 @@ class AveragingRun:
                 hooked))
             state["t"], state["d"] = now, telemetry["dispatches"]
 
-        sm = cnn_elm.train_members_stacked(
-            self.cfg, init, partitions, epochs=m.epochs,
-            lr_schedule=m.lr_schedule, batch_size=m.batch_size,
-            seed_base=m.seed, use_pallas=m.use_pallas, mesh=m.mesh,
+        plan = ExecutionPlan(
+            epochs=m.epochs, lr_schedule=m.lr_schedule,
+            batch_size=m.batch_size, seed=m.seed, use_pallas=m.use_pallas,
             chunk_batches=m.chunk_batches, rounds=rc.rounds,
-            round_weights=weights, on_round=on_round, telemetry=telemetry)
-        return RunResult(self.cfg, sm.unstack(), state["avg"], sm, records,
+            reduce_weights=weights, on_round=on_round, telemetry=telemetry)
+        outcome = executor.execute(self.cfg, init, partitions, plan)
+        return RunResult(self.cfg, outcome.members, state["avg"],
+                         outcome.stacked, records,
                          time.perf_counter() - t0, telemetry["dispatches"],
                          m.backend, telemetry.get("round_syncs", 0))
 
@@ -294,15 +288,6 @@ def kappa_from_confusion(cm: np.ndarray) -> float:
     po = np.trace(cm) / n
     pe = float((cm.sum(0) * cm.sum(1)).sum()) / (n * n)
     return float((po - pe) / (1 - pe + 1e-12))
-
-
-def stack_models(models: Sequence[CNNELMModel]) -> StackedMembers:
-    """Host-level models -> the stacked member layout (leaves gain a
-    leading k dim) so they can ride the batched scoring surface."""
-    cnn_k = jax.tree.map(lambda *xs: jnp.stack(xs),
-                         *[m.cnn_params for m in models])
-    beta_k = jnp.stack([jnp.asarray(m.beta) for m in models])
-    return StackedMembers(cnn_k, beta_k)
 
 
 @dataclass

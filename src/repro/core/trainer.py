@@ -13,9 +13,15 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.averaging import average_member_dim, broadcast_member_dim
+from repro.core.averaging import (average_member_dim, broadcast_member_dim,
+                                  psum_weighted_mean_members)
 from repro.models import api
 from repro.optim import apply_updates, clip_by_global_norm
+
+try:                               # jax >= 0.5
+    from jax import shard_map
+except ImportError:                # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
 
 
 def make_train_step(cfg, optimizer, lr_schedule,
@@ -48,7 +54,7 @@ def make_member_train_step(cfg, optimizer, lr_schedule, clip: float = 1.0,
     return jax.vmap(step, in_axes=0, out_axes=0, spmd_axis_name=spmd_axis_name)
 
 
-def make_average_step(weights=None):
+def make_average_step(weights=None, mesh=None):
     """Reduce phase (Alg. 2 lines 18-20): one cross-pod all-reduce mean,
     broadcast back as every member's next-round init.
 
@@ -58,12 +64,48 @@ def make_average_step(weights=None):
     (e.g. shard sizes) when the Reduce strategy is non-uniform, uniform
     otherwise. Applying it at round boundaries and once more at the end
     reproduces the parallel-SGD regime; applying it only at the end is the
-    paper's single final average."""
+    paper's single final average.
+
+    ``mesh=None`` (default) returns the member-dim mean+broadcast and
+    leaves partitioning to jit/GSPMD — the dry-run's lowering. With a
+    ``mesh`` (must carry a 'pod' axis; the member count must divide it)
+    the step is instead shard_map-ed explicitly and the whole tree mean is
+    ONE flat-psum all-reduce (``averaging.psum_weighted_mean_members``) —
+    the same collective contract as the mesh Map-phase executor's sync."""
+    if mesh is None:
+        def average_step(stacked_params):
+            k = jax.tree.leaves(stacked_params)[0].shape[0]
+            return broadcast_member_dim(
+                average_member_dim(stacked_params, weights=weights), k)
+
+        return average_step
+
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import member_dim_specs
+
+    if "pod" not in mesh.shape:
+        raise ValueError(f"make_average_step needs a mesh with a 'pod' "
+                         f"axis, got axes {tuple(mesh.shape)}")
 
     def average_step(stacked_params):
         k = jax.tree.leaves(stacked_params)[0].shape[0]
-        return broadcast_member_dim(
-            average_member_dim(stacked_params, weights=weights), k)
+        pods = mesh.shape["pod"]
+        if k % pods:
+            raise ValueError(
+                f"{k} members do not divide the {pods}-pod mesh — pad the "
+                f"member dim (the mesh executor's pad-and-mask contract) "
+                f"or use a divisible pod count")
+        w = jnp.ones((k,), jnp.float32) if weights is None \
+            else jnp.asarray(weights, jnp.float32)
+        specs = member_dim_specs(stacked_params, mesh)
+
+        def local(p, w_loc):
+            avg = psum_weighted_mean_members(p, w_loc, "pod")
+            k_local = jax.tree.leaves(p)[0].shape[0]
+            return broadcast_member_dim(avg, k_local)
+
+        return shard_map(local, mesh=mesh, in_specs=(specs, P("pod")),
+                         out_specs=specs)(stacked_params, w)
 
     return average_step
 

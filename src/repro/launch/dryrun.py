@@ -16,14 +16,16 @@ Cost accounting strategy (verified empirically in EXPERIMENTS.md §Dry-run):
   TPU memory-minimizing scheduler, so temp_size is an UPPER bound (sum-like,
   not peak). argument/output sizes are exact per-device footprints.
 
-MUST be the very first two lines, before any other import (jax locks the
-device count on first init):
+MUST be the very first statement, before any jax device use (jax locks the
+device count on first init). ``REPRO_HOST_DEVICES`` overrides the 512
+default — but note the production meshes need ≥256/512 devices:
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.mesh import force_host_device_count
+force_host_device_count()
 
 import argparse   # noqa: E402
 import json       # noqa: E402
+import os         # noqa: E402
 import time       # noqa: E402
 import traceback  # noqa: E402
 

@@ -1,13 +1,48 @@
-"""Production mesh builders.
+"""Production mesh builders + simulated host-device plumbing.
 
 These are FUNCTIONS (not module-level constants) so importing this module
-never touches jax device state — the dry-run sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
-use; smoke tests and benchmarks must keep seeing 1 device.
+never touches jax device state — callers that want simulated devices set
+the XLA flag (``force_host_device_count`` below) before first jax use;
+smoke tests and benchmarks must keep seeing the real device count.
+
+Simulated host devices: jax locks the device count at first backend init,
+so ``force_host_device_count()`` must run before any jax device use —
+the dry-run and hillclimb drivers call it as their first statement. The
+count comes from the ``REPRO_HOST_DEVICES`` env var (default 512, the
+production multi-pod dry-run size), so tests and CI can request small
+meshes cheaply: ``REPRO_HOST_DEVICES=8 python -m repro.launch.dryrun …``
+or ``XLA_FLAGS=--xla_force_host_platform_device_count=8 pytest …``.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+DEFAULT_HOST_DEVICES = 512   # 2x16x16 multi-pod dry-run
+
+
+def forced_host_device_count() -> int:
+    """How many host devices to simulate: ``REPRO_HOST_DEVICES`` env
+    override, else the production default of 512."""
+    return int(os.environ.get("REPRO_HOST_DEVICES", DEFAULT_HOST_DEVICES))
+
+
+def host_device_flags(n: int | None = None) -> str:
+    """The XLA flag requesting ``n`` simulated host devices (``n=None``
+    honours ``REPRO_HOST_DEVICES``) — for building a subprocess env."""
+    n = forced_host_device_count() if n is None else n
+    return f"--xla_force_host_platform_device_count={n}"
+
+
+def force_host_device_count(n: int | None = None) -> int:
+    """Append the forced-device flag to this process's ``XLA_FLAGS``.
+    MUST run before the first jax backend use (importing jax is fine —
+    the count locks at first device query, not at import)."""
+    n = forced_host_device_count() if n is None else n
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (flags + " " + host_device_flags(n)).strip()
+    return n
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,9 +53,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh():
-    """A 1x1 mesh over whatever devices actually exist — for smoke runs."""
+    """A 1x1 mesh over whatever devices actually exist — for smoke runs.
+    (Under ``force_host_device_count``/``REPRO_HOST_DEVICES`` that is the
+    simulated count, not the physical one.)"""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_member_mesh(num_pods: int | None = None):
+    """A 1-D ``('pod',)`` mesh for the mesh Map-phase executor
+    (``runner.MapConfig(backend="mesh")``): one pod per distributed-
+    averaging member group, over the first ``num_pods`` devices (default:
+    all of them)."""
+    n = len(jax.devices()) if num_pods is None else num_pods
+    return jax.make_mesh((n,), ("pod",))
 
 
 def axis_size(mesh, name: str) -> int:

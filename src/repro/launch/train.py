@@ -106,9 +106,9 @@ def main(argv=None):
     step_fn = jax.jit(trainer.make_train_step(cfg, opt, sched))
     # the rounds contract: --rounds R == one averaging event every
     # steps/R steps (runner.ReduceConfig(rounds=R) at LM scale); each event
-    # is the same mean+broadcast trainer.make_average_step lowers for the
-    # multi-pod mesh — here members share one averaged host tree instead of
-    # materialising a k-wide stack per sync
+    # applies trainer.make_average_step — the exact mean+broadcast program
+    # the multi-pod dry-run lowers (pass mesh= for the explicit one-
+    # all-reduce shard_map variant on real pods)
     if args.rounds:
         if args.rounds < 1:
             raise SystemExit(f"--rounds must be >= 1, got {args.rounds}")
@@ -129,6 +129,16 @@ def main(argv=None):
     print(f"# arch={cfg.name} params={n_params/1e6:.1f}M members={args.members} "
           f"avg_period={avg_period or 'final'} non_iid={args.non_iid}")
 
+    def apply_sync(members):
+        """One averaging event: the host-side f32 mean, shared by every
+        member — numerically the rounds contract
+        (``trainer.make_average_step``) without materialising a k-wide
+        stacked + broadcast copy of the params per sync; on a real pod
+        mesh the device-resident ``make_average_step(mesh=...)`` (one
+        all-reduce) replaces this."""
+        avg = average_trees([m[0] for m in members])
+        return [(avg, o, s) for (_, o, s) in members]
+
     history = []
     t0 = time.time()
     for step in range(args.steps):
@@ -140,8 +150,7 @@ def main(argv=None):
             losses.append(float(metrics["loss"]))
         members = new_members
         if avg_period and (step + 1) % avg_period == 0:
-            avg = average_trees([m[0] for m in members])
-            members = [(avg, o, s) for (_, o, s) in members]
+            members = apply_sync(members)
         history.append(losses)
         if (step + 1) % args.log_every == 0:
             print(f"step {step+1:5d} losses=" +

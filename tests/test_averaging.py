@@ -98,3 +98,63 @@ def test_average_bf16_accumulates_in_f32():
     wavg = weighted_average_trees(ms, [1.0] * k)
     np.testing.assert_array_equal(np.asarray(avg["w"], np.float32),
                                   np.asarray(wavg["w"], np.float32))
+
+
+def test_psum_weighted_mean_members_single_collective_semantics():
+    """The flat-psum weighted mean (the mesh executor's Reduce/sync
+    primitive) inside shard_map over the member dim == the host weighted
+    member-dim mean; zero weights drop members (the padded-member
+    contract)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.averaging import psum_weighted_mean_members
+    try:
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("pod",))
+    k = 2 * n_dev
+    ms = [_tree(200 + i) for i in range(k)]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ms)
+    w = np.zeros((k,), np.float32)
+    w[:k - 1] = np.arange(1, k, dtype=np.float32)   # last member dropped
+
+    fn = shard_map(
+        lambda t, wl: psum_weighted_mean_members(t, wl, "pod"),
+        mesh=mesh,
+        in_specs=(jax.tree.map(lambda a: P("pod", *([None] * (a.ndim - 1))),
+                               stacked), P("pod")),
+        out_specs=jax.tree.map(lambda a: P(*([None] * (a.ndim - 1))),
+                               stacked))
+    out = fn(jax.device_put(stacked,
+                            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                         jax.tree.map(
+                                             lambda a: P("pod", *([None] * (
+                                                 a.ndim - 1))), stacked),
+                                         is_leaf=lambda x: isinstance(x, P))),
+             jax.device_put(jnp.asarray(w), NamedSharding(mesh, P("pod"))))
+    ref = average_member_dim(stacked, weights=w)
+    for la, lb in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_make_average_step_mesh_validates_contract():
+    """trainer.make_average_step(mesh=): a mesh without a 'pod' axis and a
+    member count that doesn't divide the pod axis both fail with clear
+    errors (the mesh executor's contract), not deep shard_map KeyErrors."""
+    import pytest
+    from repro.core import trainer
+
+    with pytest.raises(ValueError, match="'pod' axis"):
+        trainer.make_average_step(mesh=jax.make_mesh((1,), ("data",)))
+    n = len(jax.devices())
+    step = trainer.make_average_step(mesh=jax.make_mesh((n,), ("pod",)))
+    if n > 1:   # with 1 pod every member count divides
+        with pytest.raises(ValueError, match="do not divide"):
+            step({"w": jnp.zeros((n + 1, 3))})
+    else:       # degenerate mesh still averages correctly
+        out = step({"w": jnp.asarray([[1.0, 3.0], [3.0, 5.0]])})
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   [[2.0, 4.0], [2.0, 4.0]])

@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_reduced_config
-from repro.core import cnn_elm, elm
+from repro.core import cnn_elm
+from repro.core.runner import (AveragingRun, MapConfig, evaluate_model,
+                               kappa_model)
 from repro.data.partition import partition_by_class, partition_iid
 from repro.data.synthetic import make_extended_mnist, make_not_mnist
 from repro.models import cnn
@@ -37,7 +39,7 @@ def test_elm_only_beats_chance(mnist_like):
     params = cnn.init_params(CFG, KEY)
     model = cnn_elm.train_member(CFG, params, part, epochs=0,
                                  lr_schedule=None, batch_size=128)
-    acc = cnn_elm.evaluate(CFG, model, test.x, test.y)
+    acc = evaluate_model(CFG, model, test.x, test.y)
     assert acc > 0.4, acc
 
 
@@ -51,8 +53,8 @@ def test_sgd_epochs_do_not_collapse(mnist_like):
                               lr_schedule=None, batch_size=128)
     m1 = cnn_elm.train_member(CFG, params, part, epochs=2,
                               lr_schedule=dynamic_paper(0.05), batch_size=128)
-    a0 = cnn_elm.evaluate(CFG, m0, test.x, test.y)
-    a1 = cnn_elm.evaluate(CFG, m1, test.x, test.y)
+    a0 = evaluate_model(CFG, m0, test.x, test.y)
+    a1 = evaluate_model(CFG, m1, test.x, test.y)
     assert a1 > a0 - 0.05, (a0, a1)
 
 
@@ -60,13 +62,14 @@ def test_averaging_iid_close_to_monolithic(mnist_like):
     """Table 4: with IID partitions, Average-k ~= no-partition model."""
     train, test = mnist_like
     parts = partition_iid(train.x, train.y, k=4, seed=0)
-    members, avg = cnn_elm.distributed_cnn_elm(
-        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=128)
+    res = AveragingRun(CFG, MapConfig(epochs=0, batch_size=128,
+                                      backend="sequential")).run(parts, KEY)
+    avg = res.averaged
     mono = cnn_elm.train_member(CFG, cnn.init_params(CFG, KEY),
                                 partition_iid(train.x, train.y, 1)[0],
                                 epochs=0, lr_schedule=None, batch_size=128)
-    acc_avg = cnn_elm.evaluate(CFG, avg, test.x, test.y)
-    acc_mono = cnn_elm.evaluate(CFG, mono, test.x, test.y)
+    acc_avg = evaluate_model(CFG, avg, test.x, test.y)
+    acc_mono = evaluate_model(CFG, mono, test.x, test.y)
     assert acc_avg > acc_mono - 0.10, (acc_avg, acc_mono)
 
 
@@ -77,10 +80,11 @@ def test_averaging_noniid_degrades_but_beats_members():
     ds = make_not_mnist(n_per_class=30, seed=2)
     train, test = ds.split(n_test=200, seed=3)
     parts = partition_by_class(train.x, train.y, k=2)
-    members, avg = cnn_elm.distributed_cnn_elm(
-        cfg, parts, KEY, epochs=0, lr_schedule=None, batch_size=64)
-    acc_avg = cnn_elm.evaluate(cfg, avg, test.x, test.y)
-    member_accs = [cnn_elm.evaluate(cfg, m, test.x, test.y) for m in members]
+    res = AveragingRun(cfg, MapConfig(epochs=0, batch_size=64,
+                                      backend="sequential")).run(parts, KEY)
+    members, avg = res.members, res.averaged
+    acc_avg = evaluate_model(cfg, avg, test.x, test.y)
+    member_accs = [evaluate_model(cfg, m, test.x, test.y) for m in members]
     # members see only half the classes -> cap ~50%; average must beat them
     assert acc_avg > max(member_accs) - 0.02, (acc_avg, member_accs)
 
@@ -103,6 +107,6 @@ def test_kappa_range(mnist_like):
     part = partition_iid(train.x, train.y, k=1)[0]
     model = cnn_elm.train_member(CFG, cnn.init_params(CFG, KEY), part,
                                  epochs=0, lr_schedule=None, batch_size=128)
-    kap = cnn_elm.kappa(CFG, model, test.x, test.y)
+    kap = kappa_model(CFG, model, test.x, test.y)
     assert -1.0 <= kap <= 1.0
     assert kap > 0.3  # should correlate strongly above chance

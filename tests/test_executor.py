@@ -1,0 +1,206 @@
+"""The execution layer (`repro.core.executor`): backend registry and
+selection, MeshExecutor ≡ StackedExecutor on whatever devices exist (the
+degenerate 1-pod mesh on plain CI; the REAL 8-device matrix re-run in a
+subprocess under a forced host device count), the engine veneer's
+backwards-compatible contract, and the REPRO_HOST_DEVICES override."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_reduced_config, replace
+from repro.core import cnn_elm, executor
+from repro.core.executor import (BACKENDS, ExecutionPlan, MeshExecutor,
+                                 SequentialExecutor, StackedExecutor,
+                                 make_executor)
+from repro.core.runner import AveragingRun, MapConfig, ReduceConfig
+from repro.data.partition import partition_iid
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+CFG = get_reduced_config("cnn_elm_6c12c")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    ds = make_extended_mnist(n_per_class=20, seed=0)
+    return partition_iid(ds.x, ds.y, k=3, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Registry + config surface
+# ---------------------------------------------------------------------------
+
+def test_registry_and_backend_names():
+    assert BACKENDS == ("sequential", "stacked", "mesh")
+    assert isinstance(make_executor("sequential"), SequentialExecutor)
+    assert isinstance(make_executor("stacked"), StackedExecutor)
+    assert isinstance(make_executor("mesh"), MeshExecutor)
+    with pytest.raises(ValueError, match="backend"):
+        make_executor("gspmd")
+    # MapConfig validates against the same registry
+    assert MapConfig(backend="mesh").backend == "mesh"
+    with pytest.raises(ValueError, match="mesh"):
+        MapConfig(backend="vectorized")
+    # only sequential lacks sync points
+    assert not SequentialExecutor.supports_rounds
+    assert StackedExecutor.supports_rounds and MeshExecutor.supports_rounds
+
+
+def test_rounds_rejected_on_sequential_only(parts):
+    lr = dynamic_paper(0.05)
+    with pytest.raises(ValueError, match="stacked"):
+        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
+                                    backend="sequential"),
+                     ReduceConfig(rounds=2)).run(parts, KEY)
+    # mesh accepts rounds (validated the other way in the mesh suite)
+    res = AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
+                                      batch_size=32, backend="mesh"),
+                       ReduceConfig(rounds=2)).run(parts, KEY)
+    assert res.round_syncs == 1
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend on whatever devices exist (1-pod degenerate on plain CI)
+# ---------------------------------------------------------------------------
+
+def test_mesh_backend_matches_stacked_elm_only(parts):
+    st = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32)).run(parts, KEY)
+    me = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                     backend="mesh")).run(parts, KEY)
+    assert me.backend == "mesh" and me.stacked is not None
+    for a, b in zip(st.members, me.members):
+        np.testing.assert_array_equal(np.asarray(a.beta), np.asarray(b.beta))
+    np.testing.assert_allclose(np.asarray(st.averaged.beta),
+                               np.asarray(me.averaged.beta),
+                               rtol=1e-5, atol=1e-6)
+    # epochs=0 Map telemetry: one scan chunk + one solve, plus the
+    # one-collective Reduce dispatch behind `averaged`
+    assert st.dispatches == 2
+    assert me.dispatches == 3
+
+
+def test_mesh_backend_sgd_and_chunked_bit_identity(parts):
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    st = AveragingRun(cfg, MapConfig(epochs=2, lr_schedule=lr,
+                                     batch_size=32)).run(parts, KEY)
+    me = AveragingRun(cfg, MapConfig(epochs=2, lr_schedule=lr, batch_size=32,
+                                     backend="mesh")).run(parts, KEY)
+    for a, b in zip(st.members, me.members):
+        np.testing.assert_allclose(np.asarray(a.beta), np.asarray(b.beta),
+                                   rtol=1e-4, atol=2e-5)
+    # chunking moves transfers, never values — on the mesh path too
+    chk = AveragingRun(cfg, MapConfig(epochs=2, lr_schedule=lr,
+                                      batch_size=32, backend="mesh",
+                                      chunk_batches=2)).run(parts, KEY)
+    np.testing.assert_array_equal(np.asarray(me.stacked.beta),
+                                  np.asarray(chk.stacked.beta))
+
+
+def test_mesh_backend_ensemble_and_records(parts):
+    res = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
+                                      backend="mesh")).run(parts, KEY)
+    assert len(res.rounds) == 1 and res.rounds[0].dispatches > 0
+    accs = res.ensemble().evaluate(
+        np.concatenate([p.x for p in parts]),
+        np.concatenate([p.y for p in parts]))
+    assert accs.shape == (3,) and (accs > 0.2).all()
+
+
+# ---------------------------------------------------------------------------
+# The engine veneer keeps its historical contract
+# ---------------------------------------------------------------------------
+
+def test_train_members_stacked_veneer_on_round(parts):
+    """cnn_elm.train_members_stacked still takes on_round(r, snapshot) and
+    round_weights — the executor adapts the wider (r, snapshot, averaged)
+    contract down to it."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    seen = {}
+    sm = cnn_elm.train_members_stacked(
+        cfg, cnn.init_params(cfg, KEY), parts, epochs=2,
+        lr_schedule=dynamic_paper(0.05), batch_size=32, rounds=2,
+        on_round=lambda r, snapshot: seen.setdefault(r, snapshot().beta))
+    assert sorted(seen) == [0, 1]
+    np.testing.assert_array_equal(np.asarray(sm.beta),
+                                  np.asarray(seen[1]))
+    with pytest.raises(ValueError, match="split evenly"):
+        cnn_elm.train_members_stacked(
+            cfg, cnn.init_params(cfg, KEY), parts, epochs=3,
+            lr_schedule=dynamic_paper(0.05), batch_size=32, rounds=2)
+
+
+def test_sequential_executor_direct(parts):
+    """Executors are drivable without the runner: the sequential one hands
+    back host members, fires on_round once with working closures, and
+    rejects a rounds>1 plan instead of silently running rounds=1."""
+    with pytest.raises(ValueError, match="stacked layout"):
+        SequentialExecutor().execute(
+            CFG, cnn.init_params(CFG, KEY), parts,
+            ExecutionPlan(epochs=2, lr_schedule=dynamic_paper(0.05),
+                          batch_size=32, rounds=2))
+    fired = {}
+    plan = ExecutionPlan(
+        epochs=0, batch_size=32, seed=1000,
+        on_round=lambda r, snap, avg: fired.update(r=r, sm=snap(),
+                                                   avg=avg()))
+    out = SequentialExecutor().execute(CFG, cnn.init_params(CFG, KEY),
+                                       parts, plan)
+    assert out.stacked is None and len(out.members) == 3
+    assert fired["r"] == 0 and fired["sm"].k == 3
+    ref = cnn_elm.average_models(out.members)
+    np.testing.assert_array_equal(np.asarray(fired["avg"].beta),
+                                  np.asarray(ref.beta))
+
+
+# ---------------------------------------------------------------------------
+# The real multi-device matrix, via subprocess (tier-1 runs single-device)
+# ---------------------------------------------------------------------------
+
+def test_mesh_exec_suite_under_8_devices():
+    """Re-run tests/test_mesh_exec.py (skipped above at 1 device) under 8
+    forced host devices — the ISSUE-4 acceptance matrix: padded/unequal
+    equivalence, rounds parity, ONE all-reduce per sync/Reduce (HLO),
+    pod-sharded solve, real shardings, E²LM global readout."""
+    if len(jax.devices()) >= 8:
+        pytest.skip("already multi-device; the module runs directly")
+    if os.environ.get("REPRO_SKIP_MESH_SUBPROCESS"):
+        pytest.skip("REPRO_SKIP_MESH_SUBPROCESS set — the caller runs "
+                    "tests/test_mesh_exec.py directly (the CI mesh step)")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=8"))
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "tests/test_mesh_exec.py"],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "passed" in out.stdout and "skipped" not in out.stdout
+
+
+def test_repro_host_devices_env_override(tmp_path):
+    """REPRO_HOST_DEVICES drives force_host_device_count (the dry-run's
+    512 default) so tests/CI can request small simulated meshes cheaply."""
+    script = (
+        "from repro.launch.mesh import (force_host_device_count, "
+        "make_host_mesh, make_member_mesh)\n"
+        "n = force_host_device_count()\n"
+        "import jax\n"
+        "assert n == 6 and len(jax.devices()) == 6, (n, jax.devices())\n"
+        "assert make_host_mesh().shape == {'data': 6, 'model': 1}\n"
+        "assert make_member_mesh().shape == {'pod': 6}\n"
+        "assert make_member_mesh(3).shape == {'pod': 3}\n"
+        "print('OK')\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               REPRO_HOST_DEVICES="6")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

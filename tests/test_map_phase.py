@@ -12,6 +12,8 @@ import pytest
 from repro.configs.base import get_reduced_config, replace
 from repro.core import cnn_elm
 from repro.core.averaging import weighted_average_trees
+from repro.core.runner import (AveragingRun, MapConfig, ReduceConfig,
+                               evaluate_model, kappa_model)
 from repro.data.partition import (Partition, batches, chunk_scan_major,
                                   epoch_batch_arrays,
                                   padded_stacked_epoch_batches, partition_iid,
@@ -22,6 +24,21 @@ from repro.optim.schedules import dynamic_paper
 
 CFG = get_reduced_config("cnn_elm_6c12c")
 KEY = jax.random.PRNGKey(0)
+
+
+def _run(cfg, parts, *, epochs, lr_schedule=None, batch_size,
+         stacked=False, weight_by_shard=False):
+    """(members, averaged) through the runner — the surface the old
+    ``distributed_cnn_elm`` shim used to wrap."""
+    res = AveragingRun(
+        cfg,
+        MapConfig(epochs=epochs, lr_schedule=lr_schedule,
+                  batch_size=batch_size,
+                  backend="stacked" if stacked else "sequential"),
+        ReduceConfig(
+            strategy="shard_weighted" if weight_by_shard else "uniform"),
+    ).run(parts, KEY)
+    return res.members, res.averaged
 
 
 @pytest.fixture(scope="module")
@@ -138,11 +155,8 @@ def test_stacked_equivalent_elm_only(parts):
     """epochs=0 (Tables 2/4): the stacked path must reproduce the sequential
     members and averaged model exactly (stats are pure sums; the β solve
     shares one lowering across both paths)."""
-    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
-        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=32)
-    m_st, avg_st = cnn_elm.distributed_cnn_elm(
-        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=32,
-        stacked=True)
+    m_seq, avg_seq = _run(CFG, parts, epochs=0, batch_size=32)
+    m_st, avg_st = _run(CFG, parts, epochs=0, batch_size=32, stacked=True)
     for a, b in zip(m_seq, m_st):
         _assert_models_close(a, b, rtol=0, atol_beta=0, atol_params=0)
     _assert_models_close(avg_seq, avg_st, rtol=1e-6, atol_beta=1e-6,
@@ -156,11 +170,10 @@ def test_stacked_equivalent_sgd_epochs(parts):
     nearly-singular normal matrix."""
     cfg = replace(CFG, elm_lambda=1.0)
     lr = dynamic_paper(0.05)
-    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
-        cfg, parts, KEY, epochs=2, lr_schedule=lr, batch_size=32)
-    m_st, avg_st = cnn_elm.distributed_cnn_elm(
-        cfg, parts, KEY, epochs=2, lr_schedule=lr, batch_size=32,
-        stacked=True)
+    m_seq, avg_seq = _run(cfg, parts, epochs=2, lr_schedule=lr,
+                          batch_size=32)
+    m_st, avg_st = _run(cfg, parts, epochs=2, lr_schedule=lr, batch_size=32,
+                        stacked=True)
     for a, b in zip(m_seq + [avg_seq], m_st + [avg_st]):
         _assert_models_close(a, b, rtol=1e-4, atol_beta=2e-5,
                              atol_params=1e-6)
@@ -220,12 +233,10 @@ def test_stacked_unequal_elm_only_bit_exact(uneq_parts):
     """epochs=0 over 3/2/1-batch shards: each masked-stacked member must be
     BIT-identical to its own sequential run (padding batches contribute
     exactly zero), and the shard-weighted Reduce must agree."""
-    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
-        CFG, uneq_parts, KEY, epochs=0, lr_schedule=None, batch_size=32,
-        weight_by_shard=True)
-    m_st, avg_st = cnn_elm.distributed_cnn_elm(
-        CFG, uneq_parts, KEY, epochs=0, lr_schedule=None, batch_size=32,
-        stacked=True, weight_by_shard=True)
+    m_seq, avg_seq = _run(CFG, uneq_parts, epochs=0, batch_size=32,
+                          weight_by_shard=True)
+    m_st, avg_st = _run(CFG, uneq_parts, epochs=0, batch_size=32,
+                        stacked=True, weight_by_shard=True)
     for a, b in zip(m_seq, m_st):
         _assert_models_close(a, b, rtol=0, atol_beta=0, atol_params=0)
     _assert_models_close(avg_seq, avg_st, rtol=1e-6, atol_beta=1e-6,
@@ -238,12 +249,10 @@ def test_stacked_unequal_sgd_matches_sequential_weighted(uneq_parts):
     the acceptance bar for lifting the equal-batch-count restriction."""
     cfg = replace(CFG, elm_lambda=1.0)
     lr = dynamic_paper(0.05)
-    m_seq, avg_seq = cnn_elm.distributed_cnn_elm(
-        cfg, uneq_parts, KEY, epochs=2, lr_schedule=lr, batch_size=32,
-        weight_by_shard=True)
-    m_st, avg_st = cnn_elm.distributed_cnn_elm(
-        cfg, uneq_parts, KEY, epochs=2, lr_schedule=lr, batch_size=32,
-        stacked=True, weight_by_shard=True)
+    m_seq, avg_seq = _run(cfg, uneq_parts, epochs=2, lr_schedule=lr,
+                          batch_size=32, weight_by_shard=True)
+    m_st, avg_st = _run(cfg, uneq_parts, epochs=2, lr_schedule=lr,
+                        batch_size=32, stacked=True, weight_by_shard=True)
     for a, b in zip(m_seq + [avg_seq], m_st + [avg_st]):
         _assert_models_close(a, b, rtol=1e-4, atol_beta=2e-5,
                              atol_params=1e-6)
@@ -287,9 +296,8 @@ def test_weight_by_shard_on_stacked_path():
     path accepts them, and the Reduce must weight by shard size."""
     ds = make_extended_mnist(n_per_class=10, seed=4)
     parts = [Partition(ds.x[:40], ds.y[:40]), Partition(ds.x[40:73], ds.y[40:73])]
-    members, avg = cnn_elm.distributed_cnn_elm(
-        CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=16,
-        stacked=True, weight_by_shard=True)
+    members, avg = _run(CFG, parts, epochs=0, batch_size=16,
+                        stacked=True, weight_by_shard=True)
     ref = cnn_elm.average_models(members, weights=[40.0, 33.0])
     np.testing.assert_allclose(np.asarray(avg.beta), np.asarray(ref.beta),
                                rtol=1e-6, atol=1e-7)
@@ -333,11 +341,11 @@ def test_evaluate_kappa_accept_backend(parts):
     ds = make_extended_mnist(n_per_class=4, seed=3)
     model = cnn_elm.train_member(CFG, cnn.init_params(CFG, KEY), parts[0],
                                  epochs=0, lr_schedule=None, batch_size=32)
-    a_ref = cnn_elm.evaluate(CFG, model, ds.x, ds.y, use_pallas=False)
-    a_pl = cnn_elm.evaluate(CFG, model, ds.x, ds.y, use_pallas=True)
+    a_ref = evaluate_model(CFG, model, ds.x, ds.y, use_pallas=False)
+    a_pl = evaluate_model(CFG, model, ds.x, ds.y, use_pallas=True)
     assert a_ref == pytest.approx(a_pl)
-    k_ref = cnn_elm.kappa(CFG, model, ds.x, ds.y, use_pallas=False)
-    k_pl = cnn_elm.kappa(CFG, model, ds.x, ds.y, use_pallas=True)
+    k_ref = kappa_model(CFG, model, ds.x, ds.y, use_pallas=False)
+    k_pl = kappa_model(CFG, model, ds.x, ds.y, use_pallas=True)
     assert k_ref == pytest.approx(k_pl, abs=1e-6)
 
 
@@ -410,3 +418,23 @@ def test_map_phase_rounds_benchmark_smoke(tmp_path):
     with pytest.raises(ValueError, match="split into rounds"):
         map_phase.run_rounds(k=2, n_per_class=8, epochs=3, batch_size=16,
                              rounds=2, iters=1, out_dir=str(tmp_path))
+
+
+def test_map_phase_mesh_benchmark_smoke(tmp_path):
+    """Mesh-sweep config: re-execs itself under 2 forced host devices,
+    emits a well-formed BENCH_map_phase_mesh.json, and hard-asserts the
+    one-all-reduce contract for the sync and the Reduce."""
+    from benchmarks import map_phase
+    payload = map_phase.run_mesh(k=2, n_per_class=8, epochs=1,
+                                 batch_size=16, rounds=1, devices=(1, 2),
+                                 iters=1, out_dir=str(tmp_path))
+    on_disk = json.loads((tmp_path / "BENCH_map_phase_mesh.json")
+                         .read_text())
+    for key in ("stacked_us", "sweep", "k", "allreduce_per_sync",
+                "allreduce_per_reduce", "sync_collective_per_chip_bytes",
+                "reduce_collective_per_chip_bytes", "cost_model"):
+        assert key in on_disk, key
+    assert payload["allreduce_per_sync"] == 1
+    assert payload["allreduce_per_reduce"] == 1
+    assert [row["devices"] for row in payload["sweep"]] == [1, 2]
+    assert all(row["mesh_us"] > 0 for row in payload["sweep"])

@@ -2,7 +2,7 @@
 validation, rounds=1 equivalence against the Algorithm-2 reference on both
 backends, the unified member-seed rule, multi-round averaging semantics +
 telemetry, the batched Ensemble scoring surface, the vectorised
-confusion-matrix kappa, and the deprecation shims."""
+confusion-matrix kappa, and the executor-backed backend selection."""
 import jax
 import numpy as np
 import pytest
@@ -332,30 +332,15 @@ def test_kappa_from_confusion_formula():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims
+# The old shim surface is GONE (PR 3 deprecated it; this PR removed it)
 # ---------------------------------------------------------------------------
 
-def test_distributed_cnn_elm_shim_warns_and_forwards(parts):
-    with pytest.warns(DeprecationWarning, match="AveragingRun"):
-        members, avg = cnn_elm.distributed_cnn_elm(
-            CFG, parts, KEY, epochs=0, lr_schedule=None, batch_size=32)
-    res = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32,
-                                      backend="sequential")).run(parts, KEY)
-    for a, b in zip(members, res.members):
-        _assert_models_equal(a, b, exact=True)
-    np.testing.assert_array_equal(np.asarray(avg.beta),
-                                  np.asarray(res.averaged.beta))
-
-
-def test_evaluate_kappa_shims_warn_and_forward(elm_run, testset):
-    model = elm_run.members[0]
-    with pytest.warns(DeprecationWarning, match="evaluate_model"):
-        acc = cnn_elm.evaluate(CFG, model, testset.x, testset.y)
-    assert acc == evaluate_model(CFG, model, testset.x, testset.y)
-    with pytest.warns(DeprecationWarning, match="kappa_model"):
-        kap = cnn_elm.kappa(CFG, model, testset.x, testset.y)
-    assert kap == pytest.approx(
-        kappa_model(CFG, model, testset.x, testset.y), abs=1e-12)
+def test_legacy_shims_removed():
+    """The 8-kwarg entry points must not silently reappear: the runner
+    (and its executors) are the only supported surface."""
+    assert not hasattr(cnn_elm, "distributed_cnn_elm")
+    assert not hasattr(cnn_elm, "evaluate")
+    assert not hasattr(cnn_elm, "kappa")
 
 
 # ---------------------------------------------------------------------------

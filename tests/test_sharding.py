@@ -55,6 +55,44 @@ def test_member_dim_prepend():
     assert out == {"w": ("member", "embed", "ff")}
 
 
+def test_member_resolve_rules():
+    """The 'member' logical axis: resolves to 'pod' when it divides, falls
+    back to replication when it doesn't or the mesh has no pod axis, and
+    honours custom rules — the divisibility contract the mesh executor's
+    pad-to-a-pod-multiple step relies on (k_pad always divides, so the
+    fallback never fires there)."""
+    pod8 = FakeMesh(pod=8)
+    assert sharding.resolve_spec((8, 5), ("member", None), pod8) == \
+        P("pod", None)
+    assert sharding.resolve_spec((16,), ("member",), pod8) == P("pod")
+    # 6 % 8 != 0 -> replicate (exactly why MeshExecutor pads 6 -> 8)
+    assert sharding.resolve_spec((6, 5), ("member", None), pod8) == \
+        P(None, None)
+    assert sharding.resolve_spec((8, 5), ("member", None), MESH) == \
+        P(None, None)  # no pod axis at all
+    # custom rules can re-home the member dim (32 divides data=16)
+    assert sharding.resolve_spec((32, 5), ("member", None), MESH,
+                                 rules={"member": ("data",)}) == \
+        P("data", None)
+
+
+def test_member_and_batch_specs_match_shardings():
+    """The spec-level twins (shard_map in/out_specs) must agree exactly
+    with the NamedSharding builders they mirror."""
+    mesh = jax.make_mesh((1,), ("pod",))
+    tree = {"w": jnp.zeros((4, 5, 3)), "b": jnp.zeros((4,))}
+    specs = sharding.member_dim_specs(tree, mesh)
+    shardings_ = sharding.member_dim_shardings(tree, mesh)
+    assert specs == {"w": P("pod", None, None), "b": P("pod")}
+    assert jax.tree.map(lambda s: s.spec, shardings_,
+                        is_leaf=lambda x: hasattr(x, "spec")) == specs
+    batch = (jnp.zeros((2, 4, 8, 5, 5)), jnp.zeros((2, 4)))
+    bspecs = sharding.stacked_batch_specs(batch, mesh, member_axis=1)
+    bshard = sharding.stacked_batch_shardings(batch, mesh, member_axis=1)
+    assert bspecs == (P(None, "pod", None, None, None), P(None, "pod"))
+    assert tuple(s.spec for s in bshard) == bspecs
+
+
 def test_stacked_batch_shardings_member_axis():
     """Scan-major batch arrays (nb, k, B, ...) shard the member dim (axis 1)
     on 'pod' — the chunked host→device pipeline's placement — with the
