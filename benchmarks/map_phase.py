@@ -428,28 +428,30 @@ def run_mesh(k: int = 8, n_per_class: int = 80, epochs: int = 2,
     return payload
 
 
-def main(smoke: bool = False):
-    kw = {}
+def main(smoke: bool = False, out_dir: str = None):
+    kw = {"out_dir": out_dir} if out_dir else {}
     if smoke:
-        # smoke results go to a throwaway dir so the tracked full-config
+        # smoke results go to a throwaway dir (or the CALLER's --out-dir —
+        # CI uploads that as an artifact) so the tracked full-config
         # artifacts under experiments/ are never overwritten by a CI tier
         import tempfile
         kw = dict(k=2, n_per_class=8, epochs=1, batch_size=16, iters=1,
-                  out_dir=tempfile.mkdtemp(prefix="bench_map_phase_smoke_"))
+                  out_dir=out_dir or
+                  tempfile.mkdtemp(prefix="bench_map_phase_smoke_"))
         print(f"# smoke JSONs -> {kw['out_dir']}", flush=True)
     run(**kw)
     run_unequal(**kw)
     run_chunked(chunk_batches=2, **kw)
     # rounds needs epochs divisible by rounds; the smoke tier runs the
     # smallest multi-round config (2 epochs, sync after epoch 1)
-    run_rounds(rounds=2, **{**kw, "epochs": 2}) if smoke else run_rounds()
+    run_rounds(rounds=2, **{**kw, "epochs": 2}) if smoke else run_rounds(**kw)
     # the mesh sweep re-execs under forced host devices; smoke sweeps a
     # 2-pod mesh only (1 epoch, single final average)
     if smoke:
         run_mesh(k=2, n_per_class=8, epochs=1, batch_size=16, rounds=1,
                  devices=(1, 2), iters=1, out_dir=kw["out_dir"])
     else:
-        run_mesh()
+        run_mesh(**kw)
 
 
 if __name__ == "__main__":
@@ -476,4 +478,4 @@ if __name__ == "__main__":
                  devices=tuple(int(d) for d in args.devices.split(",")),
                  iters=args.iters, out_dir=args.out_dir)
     else:
-        main(smoke=args.smoke)
+        main(smoke=args.smoke, out_dir=args.out_dir)

@@ -50,15 +50,35 @@ def _unflatten(flat):
 
 
 def save_checkpoint(ckpt_dir: str, name: str, step: int, tree, metadata=None):
+    """Atomic save: the full .npz is written to a tmp file first, and the
+    final ``os.replace`` is the ONLY point where ``path`` appears — a crash
+    mid-save leaves the previous checkpoint (if any) untouched and never a
+    partial file at ``path``. A failed write cleans its tmp file up.
+
+    Extension dtypes numpy cannot serialise natively (bfloat16 & friends
+    from ml_dtypes, kind 'V') are stored as same-width unsigned views with
+    the real dtype recorded in the metadata — ``restore_checkpoint`` views
+    them back, so bf16 LM params round-trip exactly."""
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(jax.device_get(tree))
+    dtypes = {}
+    for key, val in flat.items():
+        if val.dtype.kind == "V":
+            dtypes[key] = val.dtype.name
+            flat[key] = val.view(np.dtype(f"u{val.dtype.itemsize}"))
     flat["__meta__"] = np.frombuffer(
-        json.dumps({"step": step, "metadata": metadata or {}}).encode(), np.uint8)
+        json.dumps({"step": step, "metadata": metadata or {},
+                    "dtypes": dtypes}).encode(), np.uint8)
     path = os.path.join(ckpt_dir, f"{name}-{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
     return path
 
 
@@ -71,12 +91,20 @@ def restore_checkpoint(ckpt_dir: str, name: str, step: int | None = None):
     with np.load(path) as z:
         flat = {k: z[k] for k in z.files}
     meta = json.loads(bytes(flat.pop("__meta__")).decode())
+    for key, dtype in meta.pop("dtypes", {}).items():
+        flat[key] = flat[key].view(np.dtype(dtype))
     return _unflatten(flat), meta
 
 
-def latest_step(ckpt_dir: str, name: str):
+def list_steps(ckpt_dir: str, name: str):
+    """All saved steps of ``name`` in ascending order (empty when none —
+    the fault-tolerant runner uses this to find completed members/rounds)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(rf"{re.escape(name)}-(\d+)\.npz", f))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(rf"{re.escape(name)}-(\d+)\.npz", f)))
+
+
+def latest_step(ckpt_dir: str, name: str):
+    steps = list_steps(ckpt_dir, name)
+    return steps[-1] if steps else None

@@ -1,0 +1,155 @@
+"""Round-granular run state — the checkpoint schema behind the
+fault-tolerant ``AveragingRun`` (``repro.core.runner``).
+
+One ``round-<r>.npz`` per averaging round (atomic via ``ckpt``'s
+tmp-rename), holding everything the round produced:
+
+* ``members``  — the round's pre-sync member snapshot (stacked CNN params
+  + the solved β, padding already stripped on the mesh backend);
+* ``stats``    — the final-epoch ``ELMStats`` of every member (the exact
+  sufficient statistics β was solved from, so a checkpoint can re-solve
+  or E²LM-merge without replaying data);
+* ``averaged`` — the round's (weighted) averaged model through the
+  executor's native Reduce;
+* ``resume``   — on non-final rounds, the post-sync params every member
+  was reset to. THE resume point: broadcasting this tree reproduces the
+  uninterrupted run's device state bit-for-bit, because the inter-round
+  sync itself broadcasts one identical row to every member slot.
+
+Metadata carries the rng/round cursor (``round``, ``epochs_done`` = batch
+permutations consumed per member stream — the runner fast-forwards each
+``default_rng(seed + i)`` by exactly that many draws) plus the run
+fingerprint (backend, seed, epochs/rounds/batch size, k, partition row
+counts) that ``AveragingRun.resume`` validates before continuing.
+
+Sequential runs additionally checkpoint per MEMBER (that backend's unit
+of work): ``member-<i>.npz`` with the member's params, β and stats, so a
+crash while training member j resumes by training only members j..k-1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.ckpt import (latest_step, list_steps, restore_checkpoint,
+                                   save_checkpoint)
+from repro.core import elm
+from repro.core.cnn_elm import CNNELMModel, StackedMembers
+
+ROUND = "round"
+MEMBER = "member"
+
+
+def run_fingerprint(backend: str, partitions, *, seed: int, epochs: int,
+                    rounds: int, batch_size: int) -> dict:
+    """The identity of a run, embedded in every checkpoint so resume can
+    refuse a mismatched continuation instead of silently diverging. THE
+    single definition of the fingerprint fields — the executors build the
+    save-side dict and ``AveragingRun.resume`` the expected dict through
+    this one function, so the two can never drift apart."""
+    return {
+        "backend": backend,
+        "seed": seed,
+        "epochs": epochs,
+        "rounds": rounds,
+        "batch_size": batch_size,
+        "k": len(partitions),
+        "sizes": [int(len(p.x)) for p in partitions],
+    }
+
+
+def check_fingerprint(meta: dict, expected: dict):
+    """Raise with every differing field named (not just the first)."""
+    bad = {k: (meta.get(k), v) for k, v in expected.items()
+           if meta.get(k) != v}
+    if bad:
+        raise ValueError(
+            "checkpoint does not match this run — refusing to resume: " +
+            "; ".join(f"{k}: saved {s!r} vs run {e!r}"
+                      for k, (s, e) in bad.items()))
+
+
+def _stats_tree(stats: elm.ELMStats) -> dict:
+    return {"u": stats.u, "v": stats.v, "n": stats.n}
+
+
+def _tree_stats(tree: dict) -> elm.ELMStats:
+    return elm.ELMStats(tree["u"], tree["v"], tree["n"])
+
+
+@dataclass
+class RoundState:
+    """One restored ``round-<r>`` checkpoint."""
+    round: int
+    members: StackedMembers
+    stats: elm.ELMStats
+    averaged: CNNELMModel
+    resume_params: Optional[dict]     # post-sync CNN params; None on final
+    meta: dict
+
+    @property
+    def final(self) -> bool:
+        return bool(self.meta.get("final"))
+
+
+def save_round(ckpt_dir: str, round_idx: int, *, members: StackedMembers,
+               stats: elm.ELMStats, averaged: CNNELMModel,
+               resume_params=None, meta: dict) -> str:
+    tree = {
+        "members": {"cnn": members.cnn_params, "beta": members.beta},
+        "stats": _stats_tree(stats),
+        "averaged": {"cnn": averaged.cnn_params, "beta": averaged.beta},
+    }
+    if resume_params is not None:
+        tree["resume"] = resume_params
+    return save_checkpoint(ckpt_dir, ROUND, round_idx, tree, meta)
+
+
+def restore_round(ckpt_dir: str, round_idx: Optional[int] = None
+                  ) -> RoundState:
+    if round_idx is None:
+        round_idx = latest_step(ckpt_dir, ROUND)
+        if round_idx is None:
+            raise FileNotFoundError(f"no '{ROUND}' checkpoint in {ckpt_dir}")
+    tree, meta = restore_checkpoint(ckpt_dir, ROUND, round_idx)
+    return RoundState(
+        round=round_idx,
+        members=StackedMembers(tree["members"]["cnn"],
+                               tree["members"]["beta"]),
+        stats=_tree_stats(tree["stats"]),
+        averaged=CNNELMModel(tree["averaged"]["cnn"],
+                             tree["averaged"]["beta"]),
+        resume_params=tree.get("resume"),
+        meta=meta["metadata"])
+
+
+def latest_round(ckpt_dir: str) -> Optional[int]:
+    return latest_step(ckpt_dir, ROUND)
+
+
+def save_member(ckpt_dir: str, i: int, model: CNNELMModel,
+                stats: elm.ELMStats, meta: dict) -> str:
+    tree = {"cnn": model.cnn_params, "beta": model.beta,
+            "stats": _stats_tree(stats)}
+    return save_checkpoint(ckpt_dir, MEMBER, i, tree, meta)
+
+
+def restore_member(ckpt_dir: str, i: int):
+    tree, meta = restore_checkpoint(ckpt_dir, MEMBER, i)
+    return (CNNELMModel(tree["cnn"], tree["beta"]),
+            _tree_stats(tree["stats"]), meta["metadata"])
+
+
+def completed_members(ckpt_dir: str):
+    """Member indices with a durable checkpoint (ascending)."""
+    return list_steps(ckpt_dir, MEMBER)
+
+
+def stack_stats(per_member) -> elm.ELMStats:
+    """k host-level ``ELMStats`` -> one member-stacked ``ELMStats``."""
+    return elm.ELMStats(
+        np.stack([np.asarray(s.u) for s in per_member]),
+        np.stack([np.asarray(s.v) for s in per_member]),
+        np.stack([np.asarray(s.n) for s in per_member]))

@@ -94,14 +94,20 @@ def _sgd_step(cfg, cnn_params, beta, x, t, lr, *,
 
 
 def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
-                 lr_schedule, batch_size: int, seed: int = 0,
+                 lr_schedule, batch_size: int, seed=0,
                  use_pallas: Optional[bool] = None,
-                 telemetry: Optional[dict] = None) -> CNNELMModel:
+                 telemetry: Optional[dict] = None,
+                 return_stats: bool = False):
     """Algorithm 2 inner loop for one machine. epochs=0 -> ELM-only pass.
     Epoch e draws the (e+1)-th permutation of ``default_rng(seed)`` — a
-    fresh shuffle every epoch, mirrored exactly by the stacked path.
-    ``telemetry`` counts the host→device jit dispatches this loop issues
-    (3 per batch with SGD: stats, β solve, SGD step)."""
+    fresh shuffle every epoch, mirrored exactly by the stacked path
+    (``seed`` may be a live ``np.random.Generator``, consumed in place —
+    the elastic runner resumes a member's stream across round blocks that
+    way). ``telemetry`` counts the host→device jit dispatches this loop
+    issues (3 per batch with SGD: stats, β solve, SGD step).
+    ``return_stats`` additionally returns the final-epoch ``ELMStats`` β
+    was solved from — ``(model, stats)`` — for checkpointing and the
+    E²LM/elastic stats merges."""
     F = cnn.feature_dim(cfg)
     C = cfg.num_classes
     use_pallas = resolve_use_pallas(use_pallas)
@@ -129,14 +135,14 @@ def train_member(cfg, cnn_params, part: Partition, *, epochs: int,
 
     if epochs == 0:
         cnn_params, stats = one_pass(cnn_params, False, None)
-        _bump(telemetry)
-        return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
-
-    stats = None
-    for e in range(epochs):
-        cnn_params, stats = one_pass(cnn_params, True, float(lr_schedule(e)))
+    else:
+        stats = None
+        for e in range(epochs):
+            cnn_params, stats = one_pass(cnn_params, True,
+                                         float(lr_schedule(e)))
     _bump(telemetry)
-    return CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
+    model = CNNELMModel(cnn_params, elm.solve_beta(stats, cfg.elm_lambda))
+    return (model, stats) if return_stats else model
 
 
 @dataclass

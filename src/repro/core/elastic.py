@@ -37,15 +37,19 @@ class ElasticGroup:
     retired_stats: list = field(default_factory=list)
 
     def join(self, name: str, init_params=None):
-        """New member starts from the average of the living members (or an
-        explicit init when the group is empty)."""
-        if self.members:
-            params = self.reduce_params()
-        elif init_params is not None:
-            params = init_params
-        else:
-            raise ValueError("first member needs init_params")
-        self.members[name] = Member(params=params)
+        """New member starts from the current group average (Alg. 2 line
+        3's shared-init rule, applied mid-training). An explicit
+        ``init_params`` overrides the average — the runner passes the
+        boundary sync's exact output so a joiner and the reset incumbents
+        share one bit-identical starting tree; an empty group requires
+        it."""
+        if name in self.members:
+            raise ValueError(f"member {name!r} already in the group")
+        if init_params is None:
+            if not self.members:
+                raise ValueError("first member needs init_params")
+            init_params = self.reduce_params()
+        self.members[name] = Member(params=init_params)
         return self.members[name]
 
     def leave(self, name: str):
@@ -72,6 +76,17 @@ class ElasticGroup:
         entries += self.retired_params
         trees, weights = zip(*entries)
         return weighted_average_trees(list(trees), list(weights))
+
+    def sync(self):
+        """One averaging event over the whole group: every living member
+        restarts from the same ``reduce_params()`` average — the
+        inter-round sync of the rounds contract under elastic membership
+        (a departed member's final contribution stays in the average via
+        ``retired_params``). Returns the average."""
+        avg = self.reduce_params()
+        for m in self.members.values():
+            m.params = avg
+        return avg
 
     def reduce_stats(self) -> Optional[elm.ELMStats]:
         all_stats = [m.stats for m in self.members.values()

@@ -39,6 +39,19 @@ Telemetry contract (a plain dict, shared with the runner's ``RunResult``):
 chunks, β solves, syncs); ``round_syncs`` the inter-round average+broadcast
 programs; ``reduce_dispatches`` (mesh only) the one-collective Reduce
 programs behind each ``averaged()``.
+
+Fault tolerance (``plan.checkpoint`` / ``plan.start_round`` /
+``plan.completed``): the stacked layouts save one atomic
+``checkpoint.run_state`` round file per averaging round — the pre-sync
+member snapshot + final-epoch stats + averaged model, and (non-final
+rounds) the post-sync params every member was reset to. Resume places
+those post-sync params as the shared init, skips the completed rounds and
+fast-forwards each member's rng stream by the skipped epochs' permutation
+draws, which reproduces the uninterrupted run bit-for-bit (the sync
+broadcasts one identical row to every member slot, so the saved row IS
+the device state). The sequential reference checkpoints per MEMBER
+instead (its unit of work); ``plan.completed`` hands restored members
+back in and only the missing ones train.
 """
 from __future__ import annotations
 
@@ -56,6 +69,7 @@ try:                               # jax >= 0.5
 except ImportError:                # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 
+from repro.checkpoint import run_state
 from repro.core import elm
 from repro.core.averaging import (average_member_dim, broadcast_member_dim,
                                   psum_weighted_mean_members)
@@ -78,6 +92,26 @@ BACKENDS = ("sequential", "stacked", "mesh")
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class CheckpointConfig:
+    """Per-round checkpoint policy (``repro.checkpoint.run_state`` files).
+
+    ``dir`` — where the atomic ``round-<r>.npz`` (and, on the sequential
+    backend, ``member-<i>.npz``) files land. ``every`` — save round r when
+    ``(r + 1) % every == 0``; the final round always saves. ``after_save``
+    — fault-injection hook ``(unit, index, path)`` called the moment a
+    checkpoint is durably renamed into place (``unit`` is ``"round"`` or
+    ``"member"``); ``repro.core.faults`` raises ``InjectedCrash`` from it
+    to simulate preemption at the tightest possible point."""
+    dir: str
+    every: int = 1
+    after_save: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+
+
+@dataclass(frozen=True)
 class ExecutionPlan:
     """Everything one Map/Reduce execution needs, backend-agnostic.
 
@@ -88,6 +122,17 @@ class ExecutionPlan:
     → the round's (weighted) averaged ``CNNELMModel`` via the executor's
     native Reduce (host mean / member-dim mean / one in-mesh all-reduce).
     ``reduce_weights`` drive BOTH the inter-round syncs and ``averaged()``.
+
+    Fault-tolerance fields: ``checkpoint`` turns on per-round (stacked
+    layouts) / per-member (sequential) saving; ``start_round`` resumes a
+    stacked run at that round — ``init_params`` must then be the restored
+    post-sync params and the skipped rounds' rng draws are burned so the
+    continuation is bit-identical; ``completed`` hands the sequential
+    backend already-trained members ``{i: (model, stats)}`` to skip.
+    ``member_seeds`` overrides the positional ``seed + i`` rule and
+    ``start_epochs`` fast-forwards each member's stream by that many
+    permutation draws — the elastic runner's stream-continuation contract
+    (a member keeps ONE rng stream across round blocks).
     """
     epochs: int = 0
     lr_schedule: Optional[Callable[[int], float]] = None
@@ -99,14 +144,23 @@ class ExecutionPlan:
     reduce_weights: Optional[Sequence[float]] = None
     on_round: Optional[Callable] = None
     telemetry: Optional[dict] = None
+    checkpoint: Optional[CheckpointConfig] = None
+    start_round: int = 0
+    completed: Optional[dict] = None
+    member_seeds: Optional[Sequence[int]] = None
+    start_epochs: Optional[Sequence[int]] = None
 
 
 @dataclass
 class MapOutcome:
-    """What an executor hands back: the k trained members, plus the live
-    ``StackedMembers`` on the stacked layouts (None on sequential)."""
+    """What an executor hands back: the k trained members, the live
+    ``StackedMembers`` on the stacked layouts (None on sequential), and
+    the final-epoch ``ELMStats`` of every member (host, member-stacked,
+    padding stripped) — what β was solved from, for checkpointing and the
+    elastic/E²LM stats merges."""
     members: List[CNNELMModel]
     stacked: Optional[StackedMembers]
+    stats: Optional[elm.ELMStats] = None
 
 
 def make_executor(backend: str, mesh=None) -> "Executor":
@@ -123,13 +177,40 @@ def make_executor(backend: str, mesh=None) -> "Executor":
 
 
 # ---------------------------------------------------------------------------
+# Shared per-member stream plumbing
+# ---------------------------------------------------------------------------
+
+def _member_seeds(plan: ExecutionPlan, k: int) -> List[int]:
+    if plan.member_seeds is None:
+        return [plan.seed + i for i in range(k)]
+    seeds = list(plan.member_seeds)
+    if len(seeds) != k:
+        raise ValueError(f"{len(seeds)} member_seeds for {k} partitions")
+    return seeds
+
+
+def _stream_burns(plan: ExecutionPlan, k: int, per_round: int) -> List[int]:
+    """Permutation draws to fast-forward each member stream by before the
+    first epoch: explicit per-member ``start_epochs`` (elastic
+    continuation), else the skipped ``start_round`` rounds (resume)."""
+    if plan.start_epochs is None:
+        return [plan.start_round * per_round] * k
+    burns = list(plan.start_epochs)
+    if len(burns) != k:
+        raise ValueError(f"{len(burns)} start_epochs for {k} partitions")
+    return burns
+
+
+# ---------------------------------------------------------------------------
 # Sequential: the faithful host-loop reference
 # ---------------------------------------------------------------------------
 
 class SequentialExecutor:
     """One ``cnn_elm.train_member`` host loop per member — the Algorithm 2
     reference every fast path is tested against. No sync points between
-    members, so multi-round averaging is unsupported."""
+    members, so multi-round averaging is unsupported; fault tolerance is
+    per MEMBER instead (each member's training is self-contained, so a
+    member checkpoint is a complete unit of restartable work)."""
 
     name = "sequential"
     supports_rounds = False
@@ -143,11 +224,42 @@ class SequentialExecutor:
                 "rounds > 1 needs a stacked layout (StackedExecutor or "
                 "MeshExecutor) — the sequential reference has no sync "
                 "point between members")
-        members = [train_member(
-            cfg, init_params, p, epochs=plan.epochs,
-            lr_schedule=plan.lr_schedule, batch_size=plan.batch_size,
-            seed=plan.seed + i, use_pallas=plan.use_pallas,
-            telemetry=plan.telemetry) for i, p in enumerate(partitions)]
+        if plan.start_round:
+            raise ValueError(
+                "start_round resume is a stacked-layout contract; the "
+                "sequential backend resumes via plan.completed member "
+                "checkpoints")
+        k = len(partitions)
+        seeds = _member_seeds(plan, k)
+        burns = _stream_burns(plan, k, 0)
+        ck = plan.checkpoint
+        done = dict(plan.completed or {})
+        meta = run_state.run_fingerprint(
+            self.name, partitions, seed=plan.seed, epochs=plan.epochs,
+            rounds=plan.rounds, batch_size=plan.batch_size)
+        members: List[CNNELMModel] = []
+        all_stats = []
+        for i, p in enumerate(partitions):
+            if i in done:
+                model, stats = done[i]
+            else:
+                rng = np.random.default_rng(seeds[i])
+                for _ in range(burns[i]):
+                    rng.permutation(len(p.x))
+                model, stats = train_member(
+                    cfg, init_params, p, epochs=plan.epochs,
+                    lr_schedule=plan.lr_schedule,
+                    batch_size=plan.batch_size, seed=rng,
+                    use_pallas=plan.use_pallas, telemetry=plan.telemetry,
+                    return_stats=True)
+                if ck is not None:
+                    path = run_state.save_member(ck.dir, i, model, stats,
+                                                 {**meta, "member": i})
+                    if ck.after_save is not None:
+                        ck.after_save("member", i, path)
+            members.append(model)
+            all_stats.append(stats)
+        stats_k = run_state.stack_stats(all_stats)
         cache: dict = {}
 
         def snapshot():
@@ -161,9 +273,17 @@ class SequentialExecutor:
                                               weights=plan.reduce_weights)
             return cache["avg"]
 
+        if ck is not None:
+            path = run_state.save_round(
+                ck.dir, 0, members=snapshot(), stats=stats_k,
+                averaged=averaged(),
+                meta={**meta, "round": 0, "epochs_done": plan.epochs,
+                      "final": True})
+            if ck.after_save is not None:
+                ck.after_save("round", 0, path)
         if plan.on_round is not None:
             plan.on_round(0, snapshot, averaged)
-        return MapOutcome(members, None)
+        return MapOutcome(members, None, stats_k)
 
 
 # ---------------------------------------------------------------------------
@@ -208,23 +328,46 @@ class _StackedBase:
         if plan.rounds > 1 and plan.epochs % plan.rounds:
             raise ValueError(f"epochs ({plan.epochs}) must split evenly "
                              f"into rounds ({plan.rounds})")
+        if plan.start_round and not 0 < plan.start_round < plan.rounds:
+            raise ValueError(
+                f"start_round {plan.start_round} outside this plan's "
+                f"resumable rounds (1..{plan.rounds - 1}); a finished run "
+                f"resumes from its final checkpoint, not through execute")
+        if plan.completed:
+            raise ValueError("plan.completed is the sequential backend's "
+                             "resume contract; stacked layouts resume via "
+                             "start_round")
         k = len(partitions)
         F, C = cnn.feature_dim(cfg), cfg.num_classes
         use_pallas = resolve_use_pallas(plan.use_pallas)
         telemetry = plan.telemetry
         self._begin(cfg, k)
+        per_round = plan.epochs // plan.rounds
         # live per-member streams: each epoch's builder call draws the next
-        # permutation (mirrors train_member's stream, no epoch replay)
-        rngs = [np.random.default_rng(plan.seed + i) for i in range(k)]
+        # permutation (mirrors train_member's stream, no epoch replay);
+        # resume / elastic continuation fast-forwards by burning the
+        # already-consumed epochs' draws — one permutation per epoch
+        rngs = [np.random.default_rng(s) for s in _member_seeds(plan, k)]
+        for rng, p, burn in zip(rngs, partitions,
+                                _stream_burns(plan, k, per_round)):
+            for _ in range(burn):
+                rng.permutation(len(p.x))
         params_k = self._place_params(init_params)
 
-        per_round = plan.epochs // plan.rounds
         round_passes = [[(False, 0.0)]] if plan.epochs == 0 else [
             [(True, float(plan.lr_schedule(r * per_round + e)))
              for e in range(per_round)] for r in range(plan.rounds)]
         sm = None
+        stats_k = None
+        ck = plan.checkpoint
+        ck_meta = (run_state.run_fingerprint(
+            self.name, partitions, seed=plan.seed, epochs=plan.epochs,
+            rounds=plan.rounds, batch_size=plan.batch_size)
+            if ck is not None else None)
         for r, passes in enumerate(round_passes):
-            stats_k = None
+            if r < plan.start_round:
+                continue        # completed before the resume point; the
+            stats_k = None      # rng draws were burned above
             for solve_each_batch, lr in passes:
                 xb, tb, mb, chunk = self._epoch_arrays(
                     partitions, plan.batch_size, rngs, C, plan.chunk_batches)
@@ -252,9 +395,27 @@ class _StackedBase:
                 # round's books, so per-round telemetry prices its own sync
                 _bump(telemetry)
                 _bump(telemetry, key="round_syncs")
+            if ck is not None and (last or (r + 1) % ck.every == 0):
+                resume = None
+                if not last:
+                    # the sync broadcast one identical row into every
+                    # member slot — row 0 of the POST-sync params IS the
+                    # resume point: placing it via the normal broadcast
+                    # reproduces the device state bit-for-bit
+                    resume = jax.tree.map(lambda a: np.asarray(a)[0],
+                                          params_k)
+                path = run_state.save_round(
+                    ck.dir, r, members=snapshot(),
+                    stats=self._host_stats(stats_k), averaged=averaged(),
+                    resume_params=resume,
+                    meta={**ck_meta, "round": r,
+                          "epochs_done": (r + 1) * per_round,
+                          "final": last})
+                if ck.after_save is not None:
+                    ck.after_save("round", r, path)
             if plan.on_round is not None:
                 plan.on_round(r, snapshot, averaged)
-        return MapOutcome(sm.unstack(), sm)
+        return MapOutcome(sm.unstack(), sm, self._host_stats(stats_k))
 
     def _round_closures(self, cfg, params_k, stats_k, weights, telemetry):
         """Lazy, cached snapshot/averaged over THIS round's pre-sync state.
@@ -310,6 +471,10 @@ class _StackedBase:
 
     def _pad_epoch(self, xb, tb, mb):
         return xb, tb, mb
+
+    def _host_stats(self, stats_k) -> elm.ELMStats:
+        """Member-stacked stats on the host (mesh strips the padding)."""
+        return elm.ELMStats(*(np.asarray(a) for a in stats_k))
 
 
 class StackedExecutor(_StackedBase):
@@ -561,6 +726,9 @@ class MeshExecutor(_StackedBase):
         member slots — the only point where member arrays leave the mesh."""
         take = lambda a: jnp.asarray(np.asarray(a)[:self._k])
         return StackedMembers(jax.tree.map(take, params_k), take(beta_k))
+
+    def _host_stats(self, stats_k) -> elm.ELMStats:
+        return elm.ELMStats(*(np.asarray(a)[:self._k] for a in stats_k))
 
     def _averaged(self, params_k, beta_k, weights, telemetry):
         _bump(telemetry)

@@ -1,0 +1,97 @@
+"""Failure injection — the harness that exercises the fault-tolerance
+layer end to end (tests and ``benchmarks/elastic_resume.py``).
+
+Two failure families, mirroring what a preemptible big-data cluster
+actually does to a run:
+
+* **Crash policies** — ``crash_after(unit, index)`` raises
+  ``InjectedCrash`` from ``CheckpointConfig.after_save`` the moment the
+  named checkpoint is durably renamed into place: the tightest possible
+  preemption point (state on disk, process gone mid-run).
+  ``run_to_crash`` drives an ``AveragingRun`` into it and
+  ``run_crash_resume`` closes the loop — crash, resume, return both the
+  resumed and an uninterrupted reference result for equivalence checks.
+* **Straggler-drop policies** — ``straggler_drop_schedule`` turns shard
+  sizes into an ``ElasticSchedule``: members whose shard exceeds
+  ``factor`` × the median row count leave at a round boundary (on the
+  CPU-simulated cluster every member shares one clock, so data volume IS
+  the straggler signal), with their contribution kept per ``ElasticGroup``
+  leave semantics. At least one member always survives.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.runner import (AveragingRun, CheckpointConfig, ElasticEvent,
+                               ElasticSchedule)
+from repro.data.partition import Partition
+
+
+class InjectedCrash(RuntimeError):
+    """The stand-in for a worker preemption / OOM-kill / spot reclaim."""
+
+
+def crash_after(unit: str, index: int):
+    """A ``CheckpointConfig.after_save`` hook raising ``InjectedCrash``
+    right after checkpoint ``unit`` (``"round"`` on the stacked layouts,
+    ``"member"`` on sequential) number ``index`` is durable on disk."""
+    if unit not in ("round", "member"):
+        raise ValueError(f"unit must be 'round' or 'member', got {unit!r}")
+
+    def hook(u: str, i: int, path: str):
+        if u == unit and i == index:
+            raise InjectedCrash(
+                f"injected crash after {unit} {index} checkpoint ({path})")
+    return hook
+
+
+def run_to_crash(run: AveragingRun, partitions: Sequence[Partition], key,
+                 ckpt_dir: str, *, unit: str = "round", index: int = 0,
+                 every: int = 1) -> bool:
+    """Run until the injected preemption fires. Returns True when the
+    crash hit (the checkpoint it trails is on disk), False when the run
+    finished before ever reaching the crash point."""
+    ck = CheckpointConfig(dir=ckpt_dir, every=every,
+                          after_save=crash_after(unit, index))
+    try:
+        run.run(partitions, key, checkpoint=ck)
+        return False
+    except InjectedCrash:
+        return True
+
+
+def run_crash_resume(run: AveragingRun, partitions: Sequence[Partition],
+                     key, ckpt_dir: str, *, unit: str = "round",
+                     index: int = 0, every: int = 1):
+    """The full preemption round-trip: crash the run after the named
+    checkpoint, resume it from disk, and return
+    ``(crashed, resumed_result)``. The caller compares ``resumed_result``
+    against an uninterrupted run — the fault-tolerance acceptance bar is
+    that they are bit-identical."""
+    crashed = run_to_crash(run, partitions, key, ckpt_dir,
+                           unit=unit, index=index, every=every)
+    return crashed, run.resume(partitions, key, ckpt_dir)
+
+
+def straggler_drop_schedule(partitions: Sequence[Partition], *,
+                            factor: float = 1.5, after_round: int = 0,
+                            max_drop: Optional[int] = None
+                            ) -> ElasticSchedule:
+    """Leave events for every member whose shard exceeds ``factor`` × the
+    median row count, applied at the ``after_round`` boundary. ``max_drop``
+    caps the departures; at least one member always survives. Returns an
+    empty schedule when the partition sizes are balanced."""
+    if factor <= 0:
+        raise ValueError(f"factor must be > 0, got {factor}")
+    rows = np.array([len(p.x) for p in partitions], np.float64)
+    cut = factor * float(np.median(rows))
+    drop = [f"m{i}" for i in np.argsort(-rows) if rows[i] > cut]
+    limit = len(partitions) - 1 if max_drop is None \
+        else min(max_drop, len(partitions) - 1)
+    drop = drop[:limit]
+    if not drop:
+        return ElasticSchedule(())
+    return ElasticSchedule((ElasticEvent(after_round=after_round,
+                                         leave=tuple(drop)),))

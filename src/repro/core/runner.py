@@ -38,22 +38,43 @@ The execution layer behind ``MapConfig.backend`` lives in
 ``evaluate`` / ``kappa`` shims are gone — docs/api.md has the migration
 table; ``evaluate_model``/``kappa_model`` below are the single-model
 entries).
+
+Fault tolerance (this layer is what makes the run preemptible):
+
+* ``CheckpointConfig`` — per-round atomic checkpoints
+  (``repro.checkpoint.run_state``): pre-sync member snapshot +
+  final-epoch ELMStats + averaged model + the post-sync resume params
+  and the rng/round cursor. ``AveragingRun.resume(partitions, key, dir)``
+  continues a killed run BIT-IDENTICALLY to the uninterrupted one (the
+  sequential backend checkpoints/resumes per member instead of per
+  round).
+* ``ElasticSchedule``/``ElasticEvent`` on ``ReduceConfig.elastic`` — the
+  paper's "trained asynchronously" Map phase meets real cluster churn:
+  members JOIN at a round boundary from that boundary's average (Alg. 2
+  line 3's shared-init rule applied mid-training) and LEAVE with their
+  final weighted contribution kept in every later average — both backed
+  by ``repro.core.elastic.ElasticGroup``, re-stacked per round block on
+  the ``sequential`` and ``stacked`` backends.
+* ``repro.core.faults`` — injectable crashes (after any durable
+  checkpoint) and straggler-drop schedules for exercising all of it.
 """
 from __future__ import annotations
 
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import elm
+from repro.checkpoint import run_state
+from repro.core import elastic, elm
 from repro.core.cnn_elm import (CNNELMModel, StackedMembers,  # noqa: F401
                                 stack_models)
-from repro.core.executor import BACKENDS, ExecutionPlan, make_executor
+from repro.core.executor import (BACKENDS, CheckpointConfig,  # noqa: F401
+                                 ExecutionPlan, make_executor)
 from repro.data.partition import Partition
 from repro.kernels import resolve_use_pallas
 from repro.models import cnn
@@ -111,6 +132,59 @@ class MapConfig:
 
 
 @dataclass(frozen=True)
+class ElasticEvent:
+    """One membership change, applied at the boundary AFTER round
+    ``after_round``'s sync: ``leave`` names depart first (their final
+    params/stats stay in the group as a retired weighted contribution),
+    then the boundary average is taken, then each ``join`` partition
+    enters as a new member starting from exactly that average."""
+    after_round: int
+    join: Tuple[Partition, ...] = ()
+    leave: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.after_round < 0:
+            raise ValueError(f"after_round must be >= 0, "
+                             f"got {self.after_round}")
+        if not (self.join or self.leave):
+            raise ValueError("an ElasticEvent needs at least one join "
+                             "partition or leave name")
+
+
+@dataclass(frozen=True)
+class ElasticSchedule:
+    """The membership timeline of an elastic run: a tuple of
+    ``ElasticEvent``s (any order; same-boundary events merge). Members are
+    named ``m<id>`` in join order — the initial k partitions are
+    ``m0..m<k-1>`` and every joiner takes the next id, which also pins its
+    rng stream (seed rule: ``MapConfig.seed + id``, the positional rule
+    extended to a stable identity so churn never reshuffles anyone's
+    data order)."""
+    events: Tuple[ElasticEvent, ...] = ()
+
+    def __post_init__(self):
+        for ev in self.events:
+            if not isinstance(ev, ElasticEvent):
+                raise ValueError(f"events must be ElasticEvent, got "
+                                 f"{type(ev).__name__}")
+
+    def at(self, boundary: int) -> Tuple[List[Partition], List[str]]:
+        """(joins, leaves) applying at the boundary after round
+        ``boundary``."""
+        joins: List[Partition] = []
+        leaves: List[str] = []
+        for ev in self.events:
+            if ev.after_round == boundary:
+                joins.extend(ev.join)
+                leaves.extend(ev.leave)
+        return joins, leaves
+
+    @property
+    def last_boundary(self) -> int:
+        return max((ev.after_round for ev in self.events), default=-1)
+
+
+@dataclass(frozen=True)
 class ReduceConfig:
     """Reduce-phase configuration (Alg. 2 lines 18-20 + beyond-paper knobs).
 
@@ -124,9 +198,20 @@ class ReduceConfig:
     non-final block the members sync to the (weighted) average — stacked
     layouts only (backend ``"stacked"``: one ``average_member_dim`` +
     ``broadcast_member_dim`` program; backend ``"mesh"``: one in-mesh
-    all-reduce, params never leave the mesh between rounds)."""
+    all-reduce, params never leave the mesh between rounds).
+
+    ``elastic`` — an ``ElasticSchedule`` of join/leave events applied at
+    round boundaries (``repro.core.elastic.ElasticGroup`` semantics:
+    joiners start from the boundary average, leavers keep a retired
+    weighted contribution in every later average). Under elastic
+    membership the averaging weights are CUMULATIVE work —
+    ``"uniform"`` counts rounds survived, ``"shard_weighted"`` rows
+    processed — so explicit weight sequences (whose length would change
+    mid-run) are rejected. Backends ``"sequential"`` and ``"stacked"``
+    (re-stacked per round block); needs ``rounds >= 2`` and SGD epochs."""
     strategy: Union[str, Sequence[float]] = "uniform"
     rounds: int = 1
+    elastic: Optional[ElasticSchedule] = None
 
     def __post_init__(self):
         if isinstance(self.strategy, str) and self.strategy not in STRATEGIES:
@@ -134,6 +219,23 @@ class ReduceConfig:
                              f"explicit weight sequence, got {self.strategy!r}")
         if self.rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.elastic is not None:
+            if not isinstance(self.elastic, ElasticSchedule):
+                raise ValueError("elastic must be an ElasticSchedule")
+            if not isinstance(self.strategy, str):
+                raise ValueError(
+                    "explicit weight sequences cannot follow membership "
+                    "changes — use 'uniform' or 'shard_weighted' with an "
+                    "elastic schedule")
+            if self.rounds < 2:
+                raise ValueError("an elastic schedule needs rounds >= 2 — "
+                                 "events apply between rounds")
+            if self.elastic.last_boundary > self.rounds - 2:
+                raise ValueError(
+                    f"elastic event after round "
+                    f"{self.elastic.last_boundary} has no following round "
+                    f"(rounds={self.rounds}; boundaries are "
+                    f"0..{self.rounds - 2})")
 
     def resolve_weights(self, partitions: Sequence[Partition]
                         ) -> Optional[List[float]]:
@@ -183,12 +285,49 @@ class RunResult:
     backend: str
     round_syncs: int = 0     # inter-round average+broadcast dispatches
                              # (rounds - 1 on the stacked backend)
+    resumed: bool = False    # True when rebuilt/continued from a checkpoint
 
     def ensemble(self, combine: str = "mean") -> "Ensemble":
         """The k members as a batched scoring surface."""
         if self.stacked is not None:
             return Ensemble(self.cfg, self.stacked, combine=combine)
         return Ensemble.from_models(self.cfg, self.members, combine=combine)
+
+
+@dataclass
+class ElasticRoundRecord:
+    """One round of an elastic run: who was in it, who changed at its
+    boundary, wall time, and the round_hook result (hooks see the BOUNDARY
+    average — leave contributions in, joiners not yet trained)."""
+    round: int
+    members: List[str]
+    joined: List[str]
+    left: List[str]
+    wall_time_s: float
+    hook: Any = None
+
+
+@dataclass
+class ElasticRunResult:
+    """An elastic run's output. ``members`` are the SURVIVING members by
+    name; ``averaged`` is the ``ElasticGroup`` Reduce — survivors' final
+    models plus every retired member's frozen weighted contribution;
+    ``group`` is the live ``ElasticGroup`` (retired params/stats, cumulative
+    step weights) for anything deeper, e.g. ``group.solve_head(lam)`` — the
+    E²LM readout over every member's recorded stats."""
+    cfg: Any
+    members: Dict[str, CNNELMModel]
+    averaged: CNNELMModel
+    group: elastic.ElasticGroup
+    rounds: List[ElasticRoundRecord]
+    wall_time_s: float
+    dispatches: int
+    backend: str
+
+    def ensemble(self, combine: str = "mean") -> "Ensemble":
+        """The surviving members as a batched scoring surface."""
+        return Ensemble.from_models(self.cfg, list(self.members.values()),
+                                    combine=combine)
 
 
 # ---------------------------------------------------------------------------
@@ -199,27 +338,119 @@ class RunResult:
 class AveragingRun:
     """One distributed-averaging experiment: model config + Map config +
     Reduce config. ``run(partitions, key)`` executes Algorithm 2 (init once,
-    Map every shard, Reduce by averaging — ``rounds`` times)."""
+    Map every shard, Reduce by averaging — ``rounds`` times; with
+    ``ReduceConfig.elastic`` set, membership changes apply between rounds
+    and the result is an ``ElasticRunResult``). ``resume(partitions, key,
+    ckpt_dir)`` continues a checkpointed run bit-identically."""
     cfg: Any
     map_cfg: MapConfig = field(default_factory=MapConfig)
     reduce_cfg: ReduceConfig = field(default_factory=ReduceConfig)
 
     def run(self, partitions: Sequence[Partition], key, *,
-            round_hook: Optional[Callable[[int, CNNELMModel], Any]] = None
-            ) -> RunResult:
+            round_hook: Optional[Callable[[int, CNNELMModel], Any]] = None,
+            checkpoint: Optional[CheckpointConfig] = None):
         """``round_hook(r, averaged)`` (optional) is evaluated after every
         round's Reduce with the round index and that round's averaged model;
         its return value lands in ``RunResult.rounds[r].hook`` — the
         per-round eval surface (accuracy curves across communication
-        rounds, early stopping, checkpointing, ...)."""
+        rounds, early stopping, ...). ``checkpoint`` turns on per-round
+        (stacked layouts) / per-member (sequential) atomic checkpointing;
+        checkpointed intermediate rounds pay their β solve + averaged-model
+        build (they are saved), where hook-less uncheckpointed rounds
+        skip both."""
+        if self.reduce_cfg.elastic is not None:
+            if checkpoint is not None:
+                raise ValueError(
+                    "checkpoint/resume of an elastic run is not supported "
+                    "yet — run the elastic schedule without a checkpoint, "
+                    "or checkpoint a fixed-membership run")
+            return self._run_elastic(partitions, key, round_hook)
+        return self._run(partitions, key, round_hook=round_hook,
+                         checkpoint=checkpoint)
+
+    def resume(self, partitions: Sequence[Partition], key, ckpt_dir: str, *,
+               round_hook: Optional[Callable] = None,
+               every: int = 1) -> RunResult:
+        """Continue a checkpointed run from ``ckpt_dir`` — bit-identical to
+        the uninterrupted run. Pass the SAME partitions and key the
+        original run got (the checkpoint fingerprint refuses anything
+        else). A finished run's final checkpoint rebuilds the result
+        without recomputation; otherwise the remaining rounds (stacked
+        layouts) or members (sequential) execute, checkpointing into the
+        same directory — pass the original ``CheckpointConfig.every`` to
+        keep its cadence (and its skipped-round β-solve savings) — and
+        ``RunResult.rounds`` covers only the re-run rounds."""
+        m, rc = self.map_cfg, self.reduce_cfg
+        if rc.elastic is not None:
+            raise ValueError("elastic runs do not checkpoint yet — nothing "
+                             "to resume")
+        expected = self._fingerprint(partitions)
+        latest = run_state.latest_round(ckpt_dir)
+        if latest is not None:
+            state = run_state.restore_round(ckpt_dir, latest)
+            run_state.check_fingerprint(state.meta, expected)
+            if state.final:
+                # the run completed before the kill: its artifacts ARE the
+                # result — rebuild, bit-identical by construction. A
+                # round_hook still fires for the restored final round (on
+                # the saved averaged model) so hook-driven pipelines see
+                # their record; earlier rounds were not saved and stay
+                # silent.
+                members = state.members.unstack()
+                stacked = None if m.backend == "sequential" \
+                    else state.members
+                records: List[RoundRecord] = []
+                if round_hook is not None:
+                    per_round = m.epochs // rc.rounds
+                    records.append(RoundRecord(
+                        state.round, state.round * per_round,
+                        (state.round + 1) * per_round if m.epochs else 0,
+                        0.0, 0, round_hook(state.round, state.averaged)))
+                return RunResult(self.cfg, members, state.averaged, stacked,
+                                 records, 0.0, 0, m.backend, 0,
+                                 resumed=True)
+            return self._run(
+                partitions, key, round_hook=round_hook,
+                checkpoint=CheckpointConfig(dir=ckpt_dir, every=every),
+                start_round=state.round + 1,
+                init_override=state.resume_params, resumed=True)
+        if m.backend == "sequential":
+            done = {}
+            for i in run_state.completed_members(ckpt_dir):
+                model, stats, meta = run_state.restore_member(ckpt_dir, i)
+                run_state.check_fingerprint(meta, expected)
+                done[i] = (model, stats)
+            if done:
+                return self._run(
+                    partitions, key, round_hook=round_hook,
+                    checkpoint=CheckpointConfig(dir=ckpt_dir, every=every),
+                    completed=done, resumed=True)
+        raise FileNotFoundError(f"no resumable checkpoint in {ckpt_dir}")
+
+    def _fingerprint(self, partitions) -> dict:
+        m, rc = self.map_cfg, self.reduce_cfg
+        return run_state.run_fingerprint(
+            m.backend, partitions, seed=m.seed, epochs=m.epochs,
+            rounds=rc.rounds, batch_size=m.batch_size)
+
+    def _run(self, partitions: Sequence[Partition], key, *,
+             round_hook: Optional[Callable] = None,
+             checkpoint: Optional[CheckpointConfig] = None,
+             start_round: int = 0, init_override=None,
+             completed: Optional[dict] = None,
+             resumed: bool = False) -> RunResult:
         m, rc = self.map_cfg, self.reduce_cfg
         executor = make_executor(m.backend, mesh=m.mesh)
         if rc.rounds > 1 and not executor.supports_rounds:
             raise ValueError("rounds > 1 requires MapConfig(backend="
                              "'stacked') or 'mesh' — the sequential "
                              "reference has no sync point between members")
+        if checkpoint is not None and \
+                not isinstance(checkpoint, CheckpointConfig):
+            raise ValueError("checkpoint must be a CheckpointConfig")
         weights = rc.resolve_weights(partitions)
-        init = cnn.init_params(self.cfg, key)
+        init = (cnn.init_params(self.cfg, key) if init_override is None
+                else init_override)
         telemetry: dict = {"dispatches": 0}
         records: List[RoundRecord] = []
         t0 = time.perf_counter()
@@ -249,12 +480,131 @@ class AveragingRun:
             epochs=m.epochs, lr_schedule=m.lr_schedule,
             batch_size=m.batch_size, seed=m.seed, use_pallas=m.use_pallas,
             chunk_batches=m.chunk_batches, rounds=rc.rounds,
-            reduce_weights=weights, on_round=on_round, telemetry=telemetry)
+            reduce_weights=weights, on_round=on_round, telemetry=telemetry,
+            checkpoint=checkpoint, start_round=start_round,
+            completed=completed)
         outcome = executor.execute(self.cfg, init, partitions, plan)
         return RunResult(self.cfg, outcome.members, state["avg"],
                          outcome.stacked, records,
                          time.perf_counter() - t0, telemetry["dispatches"],
-                         m.backend, telemetry.get("round_syncs", 0))
+                         m.backend, telemetry.get("round_syncs", 0),
+                         resumed=resumed)
+
+    def _run_elastic(self, partitions: Sequence[Partition], key,
+                     round_hook: Optional[Callable]) -> ElasticRunResult:
+        """The rounds contract under membership churn: each round is one
+        re-stacked executor block over the CURRENT members, and every
+        boundary is an ``ElasticGroup`` event — record each member's block
+        output with its round weight, retire the leavers (final params +
+        stats stay as a frozen weighted contribution), ``sync()`` everyone
+        to the boundary average, admit the joiners from exactly that
+        average. Member identity (name ``m<id>``) pins the rng stream
+        ``default_rng(MapConfig.seed + id)``, fast-forwarded per block by
+        the epochs that member has already consumed — a member's data
+        order is identical whether or not anyone else churned."""
+        m, rc = self.map_cfg, self.reduce_cfg
+        sched = rc.elastic
+        if m.backend not in ("sequential", "stacked"):
+            raise ValueError(
+                "elastic membership runs on backend 'sequential' or "
+                "'stacked' (re-stacked at membership changes) — the mesh "
+                "layout would re-pad and re-shard mid-run; run mesh with "
+                "fixed membership")
+        if m.epochs <= 0:
+            raise ValueError("elastic membership needs SGD epochs "
+                             "(epochs > 0) to split into rounds")
+        if m.epochs % rc.rounds:
+            raise ValueError(f"epochs ({m.epochs}) must split evenly into "
+                             f"rounds ({rc.rounds})")
+        per_round = m.epochs // rc.rounds
+        executor = make_executor(m.backend, mesh=m.mesh)
+        telemetry: dict = {"dispatches": 0}
+        t0 = time.perf_counter()
+        init = cnn.init_params(self.cfg, key)
+
+        def round_weight(part: Partition) -> float:
+            return (float(len(part.x)) if rc.strategy == "shard_weighted"
+                    else 1.0)
+
+        group = elastic.ElasticGroup()
+        living: Dict[str, Partition] = {}
+        joined_round: Dict[str, int] = {}
+        member_id: Dict[str, int] = {}
+        beta0 = jnp.zeros((cnn.feature_dim(self.cfg), self.cfg.num_classes),
+                          jnp.float32)
+        for i, p in enumerate(partitions):
+            name = f"m{i}"
+            group.join(name, init_params=(init, beta0))
+            living[name], joined_round[name], member_id[name] = p, 0, i
+        next_id = len(partitions)
+        cur_init = init
+        last_stats: Dict[str, elm.ELMStats] = {}
+        records: List[ElasticRoundRecord] = []
+        for r in range(rc.rounds):
+            rt = time.perf_counter()
+            names = sorted(living, key=member_id.get)      # join order
+            plan = ExecutionPlan(
+                epochs=per_round,
+                lr_schedule=(lambda e, off=r * per_round:
+                             m.lr_schedule(off + e)),
+                batch_size=m.batch_size, seed=m.seed,
+                use_pallas=m.use_pallas, chunk_batches=m.chunk_batches,
+                rounds=1, telemetry=telemetry,
+                member_seeds=[m.seed + member_id[n] for n in names],
+                start_epochs=[(r - joined_round[n]) * per_round
+                              for n in names])
+            outcome = executor.execute(self.cfg, cur_init,
+                                       [living[n] for n in names], plan)
+            for i, n in enumerate(names):
+                model = outcome.members[i]
+                group.record_step(n, (model.cnn_params, model.beta),
+                                  n=round_weight(living[n]))
+                last_stats[n] = elm.ELMStats(
+                    outcome.stats.u[i], outcome.stats.v[i],
+                    outcome.stats.n[i])
+            joined_names: List[str] = []
+            left_names: List[str] = []
+            if r < rc.rounds - 1:
+                joins, leaves = sched.at(r)
+                for n in dict.fromkeys(leaves):            # dedup, in order
+                    if n not in living:
+                        raise ValueError(
+                            f"elastic leave {n!r} at boundary {r} is not a "
+                            f"living member (living: {sorted(living)})")
+                    group.record_stats(n, last_stats.pop(n))
+                    group.leave(n)
+                    del living[n]
+                    left_names.append(n)
+                if not living:
+                    raise ValueError(
+                        f"the leaves at boundary {r} would empty the group")
+                # the boundary sync: every survivor restarts from the
+                # group average (leave contributions already retired in)
+                avg = group.sync()
+                boundary_model = CNNELMModel(*avg)
+                for p_new in joins:
+                    n = f"m{next_id}"
+                    # the joiner starts from EXACTLY the boundary average
+                    group.join(n, init_params=avg)
+                    living[n], joined_round[n] = p_new, r + 1
+                    member_id[n] = next_id
+                    next_id += 1
+                    joined_names.append(n)
+                cur_init = avg[0]
+            else:
+                for n in names:
+                    group.record_stats(n, last_stats[n])
+                boundary_model = CNNELMModel(*group.reduce_params())
+            hooked = (round_hook(r, boundary_model)
+                      if round_hook is not None else None)
+            records.append(ElasticRoundRecord(
+                r, names, joined_names, left_names,
+                time.perf_counter() - rt, hooked))
+        members = {n: CNNELMModel(*group.members[n].params)
+                   for n in sorted(living, key=member_id.get)}
+        return ElasticRunResult(self.cfg, members, boundary_model, group,
+                                records, time.perf_counter() - t0,
+                                telemetry["dispatches"], m.backend)
 
 
 # ---------------------------------------------------------------------------

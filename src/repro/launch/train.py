@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import list_steps, restore_checkpoint, save_checkpoint
 from repro.configs.base import get_config, get_reduced_config, replace
 from repro.core import trainer
 from repro.core.averaging import average_trees
@@ -88,8 +88,22 @@ def main(argv=None):
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps (full member train "
+                         "state: params + optimizer state, atomic "
+                         "tmp-rename into --ckpt-dir; 0 = final save only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest step checkpoint in "
+                         "--ckpt-dir: restores every member's params + "
+                         "optimizer state and fast-forwards each data "
+                         "stream, so the continuation matches the "
+                         "uninterrupted run")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
+    if args.ckpt_every and not args.ckpt_dir:
+        raise SystemExit("--ckpt-every needs --ckpt-dir")
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir")
 
     cfg = make_cfg(args)
     opt = {"adamw": optim.adamw, "sgd": optim.sgd,
@@ -125,6 +139,44 @@ def main(argv=None):
                for _ in range(args.members)]
     batch_fns = [make_batch_fn(cfg, args, m) for m in range(args.members)]
 
+    def save_states(step):
+        """Atomic per-member train-state checkpoint (params + optimizer
+        state; the step cursor rides the filename/metadata)."""
+        for m_i, (p, o, _) in enumerate(members):
+            save_checkpoint(args.ckpt_dir, f"state-{m_i}", step,
+                            {"params": p, "opt": o},
+                            {"arch": cfg.name, "members": args.members})
+
+    start_step = 0
+    if args.resume:
+        # anchor on the newest step EVERY member has: per-member saves are
+        # individually atomic but not atomic as a set, so a kill between
+        # member writes must fall back to the last complete step
+        common = set(list_steps(args.ckpt_dir, "state-0"))
+        for m_i in range(1, args.members):
+            common &= set(list_steps(args.ckpt_dir, f"state-{m_i}"))
+        if not common:
+            raise SystemExit(
+                f"--resume: no complete 'state-*' step for all "
+                f"{args.members} members in {args.ckpt_dir}")
+        last = max(common)
+        members = []
+        for m_i in range(args.members):
+            tree, meta = restore_checkpoint(args.ckpt_dir, f"state-{m_i}",
+                                            last)
+            p = jax.tree.map(jnp.asarray, tree["params"])
+            # sgd's state is the empty tuple, which serialises to nothing —
+            # a missing key restores as a fresh (equally empty) init
+            o = jax.tree.map(jnp.asarray, tree.get("opt", opt.init(p)))
+            members.append((p, o, jnp.asarray(meta["step"], jnp.int32)))
+        start_step = last
+        # fast-forward every member's data stream: each consumed step drew
+        # exactly one batch, so the continuation replays the same order
+        for fn in batch_fns:
+            for _ in range(start_step):
+                fn()
+        print(f"# resumed from step {start_step} in {args.ckpt_dir}")
+
     n_params = cfg.param_count()
     print(f"# arch={cfg.name} params={n_params/1e6:.1f}M members={args.members} "
           f"avg_period={avg_period or 'final'} non_iid={args.non_iid}")
@@ -141,7 +193,7 @@ def main(argv=None):
 
     history = []
     t0 = time.time()
-    for step in range(args.steps):
+    for step in range(start_step, args.steps):
         losses = []
         new_members = []
         for m, (p, o, s) in enumerate(members):
@@ -151,6 +203,8 @@ def main(argv=None):
         members = new_members
         if avg_period and (step + 1) % avg_period == 0:
             members = apply_sync(members)
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            save_states(step + 1)  # post-update AND post-sync state
         history.append(losses)
         if (step + 1) % args.log_every == 0:
             print(f"step {step+1:5d} losses=" +

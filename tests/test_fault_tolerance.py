@@ -1,0 +1,424 @@
+"""The fault-tolerance layer: per-round/per-member checkpointing with a
+bit-identical resume (the ISSUE-5 acceptance bar, on sequential, stacked
+AND — multi-device — mesh backends), ELMStats/metadata checkpoint
+round-tripping, tmp-rename atomicity under an injected mid-save crash,
+elastic membership (join-from-boundary-average, leave-with-weighted-
+contribution, ElasticGroup parity against a manual block-by-block
+replay), and the failure-injection harness itself."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import run_state
+from repro.checkpoint.ckpt import (latest_step, list_steps,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs.base import get_reduced_config, replace
+from repro.core import elm, faults
+from repro.core.averaging import weighted_average_trees
+from repro.core.cnn_elm import CNNELMModel
+from repro.core.executor import ExecutionPlan, make_executor
+from repro.core.runner import (AveragingRun, CheckpointConfig, ElasticEvent,
+                               ElasticSchedule, MapConfig, ReduceConfig)
+from repro.data.partition import partition_iid, partition_unequal
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.optim.schedules import dynamic_paper
+
+CFG = replace(get_reduced_config("cnn_elm_6c12c"), elm_lambda=1.0)
+KEY = jax.random.PRNGKey(0)
+LR = dynamic_paper(0.05)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    ds = make_extended_mnist(n_per_class=12, seed=0)
+    return partition_iid(ds.x, ds.y, k=3, seed=0)
+
+
+def _models_bit_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.beta), np.asarray(b.beta))
+    for la, lb in zip(jax.tree.leaves(a.cnn_params),
+                      jax.tree.leaves(b.cnn_params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _runs_bit_equal(ref, res):
+    assert len(ref.members) == len(res.members)
+    for a, b in zip(ref.members, res.members):
+        _models_bit_equal(a, b)
+    _models_bit_equal(ref.averaged, res.averaged)
+
+
+def _stacked_run(rounds=4, epochs=4, backend="stacked"):
+    return AveragingRun(CFG, MapConfig(epochs=epochs, lr_schedule=LR,
+                                       batch_size=16, backend=backend),
+                        ReduceConfig(rounds=rounds))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint schema: ELMStats + metadata round-trip, atomicity
+# ---------------------------------------------------------------------------
+
+def test_round_state_elmstats_and_meta_roundtrip(tmp_path, parts):
+    """save → load of a round checkpoint is bit-exact for every piece:
+    stacked members, the ELMStats β was solved from (re-solving restored
+    stats reproduces β), the averaged model, the resume params, and the
+    rng/round-cursor metadata."""
+    res = _stacked_run(rounds=1, epochs=2).run(
+        parts, KEY, checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    state = run_state.restore_round(str(tmp_path))
+    assert state.final and state.round == 0
+    assert state.meta["epochs_done"] == 2 and state.meta["rounds"] == 1
+    assert state.meta["backend"] == "stacked" and state.meta["seed"] == 1000
+    assert state.meta["sizes"] == [len(p.x) for p in parts]
+    # members + averaged round-trip bit-exactly
+    for a, b in zip(res.members, state.members.unstack()):
+        _models_bit_equal(a, b)
+    _models_bit_equal(res.averaged, state.averaged)
+    # the stats ARE the sufficient statistics of the saved β: continuing
+    # from the restored stats (one more solve) reproduces β bit-exactly
+    assert isinstance(state.stats, elm.ELMStats)
+    assert state.stats.u.shape[0] == len(parts)
+    np.testing.assert_array_equal(
+        np.asarray(elm.solve_beta(elm.ELMStats(
+            jnp.asarray(state.stats.u), jnp.asarray(state.stats.v),
+            jnp.asarray(state.stats.n)), CFG.elm_lambda)),
+        np.asarray(state.members.beta))
+    assert state.resume_params is None  # final round has no next round
+
+
+def test_ckpt_atomicity_crash_mid_save(tmp_path, monkeypatch):
+    """An interrupted save must leave no partial file at the target path,
+    no leaked tmp file, and the PREVIOUS checkpoint intact — the
+    tmp-rename contract under a crash injected mid-write."""
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    save_checkpoint(str(tmp_path), "m", 1, tree, {"ok": True})
+
+    real_savez = np.savez
+
+    def dying_savez(f, **arrs):
+        real_savez(f, **{k: v for k, v in list(arrs.items())[:1]})
+        raise faults.InjectedCrash("disk died mid-save")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(faults.InjectedCrash):
+        save_checkpoint(str(tmp_path), "m", 2,
+                        {"w": np.zeros(8, np.float32)}, {})
+    monkeypatch.undo()
+    assert list_steps(str(tmp_path), "m") == [1]     # step 2 never appeared
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    restored, meta = restore_checkpoint(str(tmp_path), "m")
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    assert meta["metadata"] == {"ok": True}
+
+
+# ---------------------------------------------------------------------------
+# Crash → resume is bit-identical (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_resume_bit_identical_stacked(tmp_path, parts):
+    """Killed right after round 1's checkpoint, resumed from disk: the
+    final members AND averaged model equal the uninterrupted run
+    bit-for-bit, and only the remaining rounds re-execute."""
+    ref = _stacked_run().run(parts, KEY)
+    crashed, res = faults.run_crash_resume(
+        _stacked_run(), parts, KEY, str(tmp_path), unit="round", index=1)
+    assert crashed and res.resumed
+    assert [r.round for r in res.rounds] == [2, 3]
+    _runs_bit_equal(ref, res)
+
+
+def test_resume_bit_identical_sequential(tmp_path, parts):
+    """Killed after member 1's checkpoint on the sequential backend:
+    resume trains only the missing members, bit-identical overall."""
+    ref = _stacked_run(rounds=1, epochs=2, backend="sequential").run(
+        parts, KEY)
+    crashed, res = faults.run_crash_resume(
+        _stacked_run(rounds=1, epochs=2, backend="sequential"),
+        parts, KEY, str(tmp_path), unit="member", index=1)
+    assert crashed and res.resumed
+    _runs_bit_equal(ref, res)
+    # members 0 and 1 were restored, not retrained: fewer dispatches
+    assert res.dispatches < ref.dispatches
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="mesh resume parity needs >= 2 devices "
+                           "(runs in the CI 8-device fault step)")
+def test_resume_bit_identical_mesh(tmp_path, parts):
+    """The same crash/resume contract on the shard_map mesh backend: the
+    post-sync row is replicated into every (padded) member slot, so the
+    saved row reproduces the sharded device state bit-for-bit."""
+    ref = _stacked_run(backend="mesh").run(parts, KEY)
+    crashed, res = faults.run_crash_resume(
+        _stacked_run(backend="mesh"), parts, KEY, str(tmp_path),
+        unit="round", index=1)
+    assert crashed and res.resumed
+    _runs_bit_equal(ref, res)
+
+
+def test_resume_from_final_checkpoint_rebuilds(tmp_path, parts):
+    """A run killed AFTER its final checkpoint resumes without any
+    recomputation: the artifacts rebuild bit-identically from disk, and a
+    round_hook still fires for the restored final round."""
+    ref = _stacked_run().run(parts, KEY,
+                             checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    res = _stacked_run().resume(parts, KEY, str(tmp_path))
+    assert res.resumed and res.dispatches == 0 and res.rounds == []
+    _runs_bit_equal(ref, res)
+    caught = {}
+    hooked = _stacked_run().resume(
+        parts, KEY, str(tmp_path),
+        round_hook=lambda r, avg: (caught.setdefault(r, avg), f"r{r}")[1])
+    assert [rec.round for rec in hooked.rounds] == [3]
+    assert hooked.rounds[0].hook == "r3"
+    _models_bit_equal(caught[3], ref.averaged)
+
+
+def test_checkpoint_every_and_cadence(tmp_path, parts):
+    """every=2 saves round 1 only before the crash (rounds 0/2 skip, the
+    final would always save); resume(every=2) keeps the original cadence —
+    round 2 still skips its checkpoint (and its forced β solve), round 3
+    saves as the final — and stays bit-identical."""
+    ref = _stacked_run().run(parts, KEY)
+    crashed = faults.run_to_crash(_stacked_run(), parts, KEY,
+                                  str(tmp_path), unit="round", index=1,
+                                  every=2)
+    assert crashed
+    assert list_steps(str(tmp_path), run_state.ROUND) == [1]
+    res = _stacked_run().resume(parts, KEY, str(tmp_path), every=2)
+    assert [r.round for r in res.rounds] == [2, 3]
+    assert run_state.completed_members(str(tmp_path)) == []
+    assert list_steps(str(tmp_path), run_state.ROUND) == [1, 3]
+    _runs_bit_equal(ref, res)
+
+
+def test_resume_rejects_mismatched_run(tmp_path, parts):
+    """The checkpoint fingerprint refuses a resume under a different
+    config or different partitions instead of silently diverging."""
+    faults.run_to_crash(_stacked_run(), parts, KEY, str(tmp_path),
+                        unit="round", index=1)
+    with pytest.raises(ValueError, match="seed"):
+        AveragingRun(CFG, MapConfig(epochs=4, lr_schedule=LR, batch_size=16,
+                                    seed=7),
+                     ReduceConfig(rounds=4)).resume(parts, KEY,
+                                                    str(tmp_path))
+    ds = make_extended_mnist(n_per_class=12, seed=1)
+    other = partition_iid(ds.x, ds.y, k=4, seed=0)
+    with pytest.raises(ValueError, match="k"):
+        _stacked_run().resume(other, KEY, str(tmp_path))
+
+
+def test_resume_empty_dir_raises(tmp_path, parts):
+    with pytest.raises(FileNotFoundError, match="no resumable"):
+        _stacked_run().resume(parts, KEY, str(tmp_path))
+
+
+def test_checkpoint_does_not_change_numerics(tmp_path, parts):
+    """Turning checkpointing on is pure observation — the trained members
+    are bit-identical with and without it."""
+    ref = _stacked_run().run(parts, KEY)
+    ck = _stacked_run().run(parts, KEY,
+                            checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    _runs_bit_equal(ref, ck)
+    assert list_steps(str(tmp_path), run_state.ROUND) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership
+# ---------------------------------------------------------------------------
+
+def test_elastic_join_starts_from_round_average(parts):
+    """A member joining at the round-0 boundary starts from EXACTLY that
+    boundary's average: with lr 0 after round 0, its CNN params never move
+    again, so its final params must bit-equal the boundary average the
+    round_hook observed."""
+    sched = ElasticSchedule((ElasticEvent(after_round=0,
+                                          join=(parts[0],)),))
+    caught = {}
+    res = AveragingRun(
+        CFG, MapConfig(epochs=2, lr_schedule=lambda e: [0.05, 0.0][e],
+                       batch_size=16),
+        ReduceConfig(rounds=2, elastic=sched)).run(
+        parts, KEY, round_hook=lambda r, m: caught.setdefault(r, m))
+    joiner = res.members["m3"]
+    for la, lb in zip(jax.tree.leaves(joiner.cnn_params),
+                      jax.tree.leaves(caught[0].cnn_params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert res.rounds[0].joined == ["m3"] and res.rounds[1].members == \
+        ["m0", "m1", "m2", "m3"]
+
+
+def test_elastic_leave_weighted_share_vs_manual_replay(parts):
+    """ElasticGroup parity, checked against an INDEPENDENT block-by-block
+    replay: drive the executor directly round by round, apply the
+    leave/average bookkeeping with bare weighted_average_trees, and the
+    elastic runner must reproduce it bit-for-bit — the departing member
+    contributes exactly its weighted share, frozen at leave time."""
+    ds = make_extended_mnist(n_per_class=12, seed=0)
+    uneq = partition_unequal(ds.x, ds.y, [96, 48], seed=1)
+    sched = ElasticSchedule((ElasticEvent(after_round=0, leave=("m1",)),))
+    res = AveragingRun(
+        CFG, MapConfig(epochs=2, lr_schedule=LR, batch_size=16),
+        ReduceConfig(strategy="shard_weighted", rounds=2,
+                     elastic=sched)).run(uneq, KEY)
+
+    # --- manual replay: round 0, both members, fresh streams ------------
+    ex = make_executor("stacked")
+    init = cnn.init_params(CFG, KEY)
+    lr0 = lambda e: LR(e)
+    out0 = ex.execute(CFG, init, uneq, ExecutionPlan(
+        epochs=1, lr_schedule=lr0, batch_size=16, rounds=1))
+    w = [96.0, 48.0]
+    m1_final = (out0.members[1].cnn_params, out0.members[1].beta)
+    # boundary: m1 leaves with its round-0 weighted share; the average is
+    # over m0's round-0 params and m1's frozen contribution
+    avg0 = weighted_average_trees(
+        [(out0.members[0].cnn_params, out0.members[0].beta), m1_final], w)
+    # round 1: m0 alone, from the boundary average, stream advanced 1 epoch
+    out1 = make_executor("stacked").execute(CFG, avg0[0], uneq[:1],
+                                            ExecutionPlan(
+        epochs=1, lr_schedule=lambda e: LR(1 + e), batch_size=16, rounds=1,
+        member_seeds=[1000], start_epochs=[1]))
+    # final reduce: m0 now carries TWO rounds of work, m1 its frozen one
+    final = weighted_average_trees(
+        [(out1.members[0].cnn_params, out1.members[0].beta), m1_final],
+        [2 * 96.0, 48.0])
+
+    _models_bit_equal(res.members["m0"], out1.members[0])
+    _models_bit_equal(res.averaged, CNNELMModel(*final))
+    # the retired entry IS m1's final params at its recorded weight
+    (ret_params, ret_w), = res.group.retired_params
+    assert ret_w == 48.0
+    _models_bit_equal(CNNELMModel(*ret_params), CNNELMModel(*m1_final))
+
+
+def test_elastic_sequential_matches_stacked(parts):
+    """The same elastic schedule on the sequential and stacked backends
+    agrees within the standard SGD cross-backend tolerance."""
+    sched = ElasticSchedule((ElasticEvent(after_round=0, leave=("m2",),
+                                          join=(parts[2],)),))
+    mk = lambda b: AveragingRun(
+        CFG, MapConfig(epochs=2, lr_schedule=LR, batch_size=16, backend=b),
+        ReduceConfig(rounds=2, elastic=sched))
+    seq = mk("sequential").run(parts, KEY)
+    st = mk("stacked").run(parts, KEY)
+    assert sorted(seq.members) == sorted(st.members) == ["m0", "m1", "m3"]
+    for n in seq.members:
+        np.testing.assert_allclose(np.asarray(seq.members[n].beta),
+                                   np.asarray(st.members[n].beta),
+                                   rtol=1e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(seq.averaged.beta),
+                               np.asarray(st.averaged.beta),
+                               rtol=1e-4, atol=2e-5)
+
+
+def test_elastic_empty_schedule_matches_plain_rounds(parts):
+    """No events + uniform weights: the elastic orchestration is the
+    standard rounds contract (same mean, block-wise instead of fused) —
+    with lr 0 in round 1 both paths end at round 0's average."""
+    lr = lambda e: [0.05, 0.0][e]
+    mk_map = lambda: MapConfig(epochs=2, lr_schedule=lr, batch_size=16)
+    plain = AveragingRun(CFG, mk_map(), ReduceConfig(rounds=2)).run(
+        parts, KEY)
+    ela = AveragingRun(CFG, mk_map(),
+                       ReduceConfig(rounds=2, elastic=ElasticSchedule())
+                       ).run(parts, KEY)
+    for n, m in zip(("m0", "m1", "m2"), plain.members):
+        for la, lb in zip(jax.tree.leaves(ela.members[n].cnn_params),
+                          jax.tree.leaves(m.cnn_params)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_elastic_validation(parts):
+    sched = ElasticSchedule((ElasticEvent(after_round=0, leave=("m0",)),))
+    with pytest.raises(ValueError, match="rounds >= 2"):
+        ReduceConfig(rounds=1, elastic=sched)
+    with pytest.raises(ValueError, match="no following round"):
+        ReduceConfig(rounds=2, elastic=ElasticSchedule(
+            (ElasticEvent(after_round=1, leave=("m0",)),)))
+    with pytest.raises(ValueError, match="explicit weight"):
+        ReduceConfig(strategy=[1.0, 2.0], rounds=2, elastic=sched)
+    with pytest.raises(ValueError, match="at least one"):
+        ElasticEvent(after_round=0)
+    lr = LR
+    with pytest.raises(ValueError, match="mesh"):
+        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr, batch_size=16,
+                                    backend="mesh"),
+                     ReduceConfig(rounds=2, elastic=sched)).run(parts, KEY)
+    with pytest.raises(ValueError, match="not a living member"):
+        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
+                                    batch_size=16),
+                     ReduceConfig(rounds=2, elastic=ElasticSchedule(
+                         (ElasticEvent(after_round=0, leave=("m9",)),)))
+                     ).run(parts, KEY)
+    with pytest.raises(ValueError, match="empty the group"):
+        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
+                                    batch_size=16),
+                     ReduceConfig(rounds=2, elastic=ElasticSchedule(
+                         (ElasticEvent(after_round=0,
+                                       leave=("m0", "m1", "m2")),)))
+                     ).run(parts, KEY)
+    with pytest.raises(ValueError, match="not supported"):
+        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
+                                    batch_size=16),
+                     ReduceConfig(rounds=2, elastic=sched)).run(
+            parts, KEY, checkpoint=CheckpointConfig(dir="/tmp/x"))
+
+
+# ---------------------------------------------------------------------------
+# Failure-injection harness
+# ---------------------------------------------------------------------------
+
+def test_straggler_drop_policy():
+    ds = make_extended_mnist(n_per_class=12, seed=0)
+    uneq = partition_unequal(ds.x, ds.y, [32, 32, 96], seed=0)
+    sched = faults.straggler_drop_schedule(uneq, factor=1.5)
+    assert len(sched.events) == 1
+    assert sched.events[0].leave == ("m2",)          # the oversized shard
+    balanced = partition_iid(ds.x, ds.y, k=3, seed=0)
+    assert faults.straggler_drop_schedule(balanced).events == ()
+    # never empties the group, even under an aggressive factor
+    tiny = partition_unequal(ds.x, ds.y, [8, 96], seed=0)
+    sched = faults.straggler_drop_schedule(tiny, factor=0.1)
+    assert len(sched.events[0].leave) == 1
+    with pytest.raises(ValueError, match="factor"):
+        faults.straggler_drop_schedule(uneq, factor=0)
+
+
+def test_crash_policy_only_fires_at_target(tmp_path, parts):
+    """A crash keyed to a never-reached index lets the run finish —
+    run_to_crash reports False and the artifacts are all on disk."""
+    crashed = faults.run_to_crash(_stacked_run(), parts, KEY,
+                                  str(tmp_path), unit="round", index=99)
+    assert not crashed
+    assert latest_step(str(tmp_path), run_state.ROUND) == 3
+    with pytest.raises(ValueError, match="unit"):
+        faults.crash_after("epoch", 0)
+
+
+# ---------------------------------------------------------------------------
+# Launcher --ckpt-every / --resume (LM scale)
+# ---------------------------------------------------------------------------
+
+def test_launcher_resume_matches_uninterrupted(tmp_path):
+    """launch.train --ckpt-every + --resume: kill after step 2 of 4, resume
+    → the final averaged checkpoint equals the uninterrupted run's."""
+    from repro.launch import train as train_launcher
+    base = ["--arch", "qwen3_8b", "--reduced", "--members", "2",
+            "--batch", "2", "--seq", "32", "--avg-period", "2",
+            "--log-every", "100"]
+    d_full, d_cut = str(tmp_path / "full"), str(tmp_path / "cut")
+    train_launcher.main(base + ["--steps", "4", "--ckpt-dir", d_full])
+    train_launcher.main(base + ["--steps", "2", "--ckpt-dir", d_cut,
+                                "--ckpt-every", "2"])     # the "killed" run
+    train_launcher.main(base + ["--steps", "4", "--ckpt-dir", d_cut,
+                                "--resume"])
+    full, _ = restore_checkpoint(d_full, "averaged")
+    cut, _ = restore_checkpoint(d_cut, "averaged")
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(cut)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
