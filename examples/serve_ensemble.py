@@ -1,79 +1,129 @@
-"""Batched k-model ensemble serving through ``runner.Ensemble``.
+"""Live ensemble serving over a training run — the train→serve pipeline.
 
-The paper's Reduce collapses k members into ONE averaged model — but the k
-trained members are also a free ensemble, and serving them naively costs k
-host round-trips per request batch. ``Ensemble`` keeps the members in the
-stacked layout the Map phase already produced and scores a request batch
-under ALL k models in a single vmap dispatch, then combines by mean score
-or majority vote.
+End-to-end demo of ``repro.serve`` (docs/serving.md):
 
-This script trains k members (stacked Map phase, epochs=0: the closed-form
-CNN-ELM), then compares
+1. **Train with checkpoints** — an ``AveragingRun`` (rounds=2, SGD
+   epochs) starts with a ``CheckpointConfig`` and is preempted right
+   after its round-0 checkpoint is durable
+   (``repro.core.faults.run_to_crash`` — the injected-crash stand-in for
+   a spot reclaim).
+2. **Serve the checkpoint** — a ``BucketedScorer`` (one XLA compile per
+   bucket, ever) over round 0's member snapshot goes behind an
+   ``EnsembleServer`` (continuous batching under a latency SLO) with a
+   ``CheckpointWatcher`` polling the same directory; an open-loop
+   traffic thread keeps single-image requests flowing.
+3. **Training resumes, the endpoint hot-swaps** — ``AveragingRun.resume``
+   finishes round 1 (bit-identical to the uninterrupted run) and writes
+   ``round-1.npz``; the watcher picks it up and swaps the serving
+   weights BETWEEN batches: zero dropped requests, zero recompiles, and
+   post-swap predictions bit-equal to scoring the new checkpoint
+   directly (asserted).
 
-  * per-member accuracy via the one-model-at-a-time loop vs the batched
-    surface (identical numbers, 1/k the dispatches),
-  * the paper's weight-averaged model vs vote vs mean-score combination.
-
-  PYTHONPATH=src python examples/serve_ensemble.py
+  PYTHONPATH=src python examples/serve_ensemble.py          # full demo
+  PYTHONPATH=src python examples/serve_ensemble.py --smoke  # CI config
 """
+import argparse
+import tempfile
+import threading
 import time
+
+import numpy as np
 
 import jax
 
-from repro.configs.base import get_config
-from repro.core.runner import (AveragingRun, Ensemble, MapConfig,
-                               ReduceConfig, evaluate_model)
+from repro.configs.base import get_reduced_config, replace
+from repro.checkpoint import run_state
+from repro.core import faults
+from repro.core.runner import AveragingRun, MapConfig, ReduceConfig
 from repro.data.partition import partition_iid
 from repro.data.synthetic import make_extended_mnist
+from repro.optim.schedules import dynamic_paper
+from repro.serve import (BucketedScorer, CheckpointWatcher, EnsembleServer,
+                         ServeConfig)
 
 
-def main():
-    cfg = get_config("cnn_elm_6c12c")
-    ds = make_extended_mnist(n_per_class=100)
-    train, test = ds.split(n_test=600)
-    k = 6
-
-    result = AveragingRun(
+def main(smoke: bool = False):
+    cfg = replace(get_reduced_config("cnn_elm_6c12c"), elm_lambda=1.0)
+    ds = make_extended_mnist(n_per_class=30 if smoke else 80, seed=0)
+    train, test = ds.split(n_test=60 if smoke else 200)
+    k = 3
+    parts = partition_iid(train.x, train.y, k)
+    key = jax.random.PRNGKey(0)
+    run = AveragingRun(
         cfg,
-        MapConfig(epochs=0, batch_size=200, backend="stacked"),
-        ReduceConfig()).run(partition_iid(train.x, train.y, k),
-                            jax.random.PRNGKey(0))
-    print(f"trained k={k} members in {result.wall_time_s:.1f}s "
-          f"({result.dispatches} dispatches)")
+        MapConfig(epochs=2, lr_schedule=dynamic_paper(0.05), batch_size=50),
+        ReduceConfig(rounds=2))
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_ensemble_")
 
-    ens = result.ensemble()                     # mean-score combination
-    # the fair one-model-at-a-time baseline: k=1 ensembles built ONCE, so
-    # the timed loop pays only per-model dispatches, not param restacking
-    singles = [Ensemble.from_models(cfg, [m]) for m in result.members]
-    # warm both jit caches so the comparison is steady-state serving cost
-    # (k dispatches per batch vs one), not compile time
-    singles[0].evaluate(test.x, test.y)
-    ens.evaluate(test.x, test.y)
+    # -- 1. train until the round-0 checkpoint is durable, then "lose"
+    #       the worker (spot reclaim) --------------------------------
+    crashed = faults.run_to_crash(run, parts, key, ckpt_dir,
+                                  unit="round", index=0)
+    assert crashed and run_state.latest_ready_round(ckpt_dir) == 0
+    print(f"train: preempted after round 0 (checkpoint in {ckpt_dir})")
+
+    # -- 2. bring the endpoint up on what's on disk -------------------
+    state0 = run_state.restore_round(ckpt_dir, 0)
+    scorer = BucketedScorer(cfg, state0.members, max_batch=8)
+    server = EnsembleServer(scorer, ServeConfig(max_batch=8,
+                                                max_wait_ms=2.0)).start()
+    watcher = CheckpointWatcher(ckpt_dir, server, poll_ms=10,
+                                start_round=0).start()
+    print(f"serve: k={scorer.k} ensemble up, buckets "
+          f"{scorer.ladder.buckets}, {scorer.compile_count()} compiles")
+
+    stop = threading.Event()
+    traffic = []
+
+    def offer_load():                      # open-loop background traffic
+        i = 0
+        while not stop.is_set():
+            traffic.append(server.submit(test.x[i % len(test.x)]))
+            i += 1
+            time.sleep(0.002)
+
+    th = threading.Thread(target=offer_load)
+    th.start()
+
+    # -- 3. training resumes on the same dir; the endpoint tracks it --
     t0 = time.perf_counter()
-    loop_accs = [float(s.evaluate(test.x, test.y)[0]) for s in singles]
-    t_loop = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    batched_accs = ens.evaluate(test.x, test.y)
-    t_batched = time.perf_counter() - t0
+    run.resume(parts, key, ckpt_dir)
+    swapped = watcher.wait_for_round(1, timeout_s=30)
+    assert swapped, "watcher never saw round 1"
+    t_swap = time.perf_counter() - t0
+    time.sleep(0.05)                       # a few post-swap batches
+    stop.set()
+    th.join()
 
-    print(f"\nper-member scoring, {len(test.x)} test rows:")
-    print(f"  k-model Python loop: {t_loop*1e3:7.1f} ms  "
-          f"accs={[f'{a:.4f}' for a in loop_accs]}")
-    print(f"  batched Ensemble:    {t_batched*1e3:7.1f} ms  "
-          f"accs={[f'{a:.4f}' for a in batched_accs]}  "
-          f"({t_loop/t_batched:.1f}x, one dispatch per eval batch)")
+    # post-swap predictions must be BIT-EQUAL to scoring the new
+    # checkpoint directly (same compiled program, same weights)
+    probe = test.x[:7]
+    via_server = np.stack(
+        [f.result(10).member_scores for f in
+         [server.submit(img) for img in probe]], axis=1)
+    server.close()
+    watcher.stop()
+    direct = BucketedScorer(cfg, run_state.restore_round(ckpt_dir, 1).members,
+                            max_batch=8).score_block(probe)
+    assert np.array_equal(via_server, direct), \
+        "post-swap serving diverged from the new checkpoint"
 
-    avg_acc = evaluate_model(cfg, result.averaged, test.x, test.y)
-    vote = Ensemble(cfg, result.stacked, combine="vote")
-    print("\ncombination modes:")
-    print(f"  weight-averaged model (the paper's Reduce): {avg_acc:.4f}")
-    print(f"  majority vote over {k} members:              "
-          f"{vote.accuracy(test.x, test.y):.4f}")
-    p_mean = ens.predict(test.x)                # one scoring pass, two metrics
-    print(f"  mean-score over {k} members:                 "
-          f"{ens.accuracy(test.x, test.y, preds=p_mean):.4f} "
-          f"(kappa {ens.kappa_combined(test.x, test.y, preds=p_mean):.4f})")
+    stats = server.stats()
+    failed = sum(1 for f in traffic if f.exception(timeout=10) is not None)
+    assert failed == 0 and stats.failed == 0 and stats.dropped == 0
+    scorer.assert_compile_budget()
+    print(f"serve: resumed training wrote round 1; hot swap staged "
+          f"{t_swap*1e3:.0f} ms after resume started")
+    print(f"serve: {stats.completed} requests answered across the swap — "
+          f"0 dropped, 0 failed, {stats.compile_count} compiles for "
+          f"{len(scorer.ladder.buckets)} buckets (no recompile), "
+          f"p50 {stats.percentile_ms(50):.1f} ms / "
+          f"p99 {stats.percentile_ms(99):.1f} ms")
+    print("serve: post-swap predictions bit-equal to the round-1 "
+          "checkpoint — the endpoint now serves the resumed run's Reduce")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI config")
+    main(smoke=ap.parse_args().smoke)

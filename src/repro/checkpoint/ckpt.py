@@ -108,3 +108,38 @@ def list_steps(ckpt_dir: str, name: str):
 def latest_step(ckpt_dir: str, name: str):
     steps = list_steps(ckpt_dir, name)
     return steps[-1] if steps else None
+
+
+def peek_step(ckpt_dir: str, name: str, step: int):
+    """The metadata dict of a checkpoint IF it is fully readable, else
+    None. Reading ``__meta__`` walks the zip central directory (stored at
+    the END of the file), so a torn/truncated write fails here instead of
+    at restore time — this is the validity probe ``latest_valid_step``
+    and the serving hot-reload watcher poll with."""
+    path = os.path.join(ckpt_dir, f"{name}-{step:08d}.npz")
+    try:
+        with np.load(path) as z:
+            return json.loads(bytes(z["__meta__"]).decode())
+    except Exception:
+        return None
+
+
+def latest_valid_step(ckpt_dir: str, name: str):
+    """Newest step of ``name`` whose file is FULLY readable — the poll
+    entry for anyone watching a checkpoint dir a live writer is still
+    appending to (serving hot-reload, resume-while-training).
+
+    Robustness contract (skip + retry, never crash):
+    * in-flight ``*.tmp`` files never match the step pattern and are
+      invisible;
+    * a partially written / torn ``<name>-<step>.npz`` (a writer killed
+      mid-save without the atomic rename, a non-atomic network fs, a
+      torn mirror copy — ``repro.core.faults.inject_torn_save`` fakes
+      exactly this) fails the ``peek_step`` probe and is SKIPPED in
+      favour of the newest older valid step; the next poll retries it,
+      so the step becomes visible the moment a complete file lands.
+    Returns None when no valid step exists yet."""
+    for step in reversed(list_steps(ckpt_dir, name)):
+        if peek_step(ckpt_dir, name, step) is not None:
+            return step
+    return None

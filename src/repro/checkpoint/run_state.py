@@ -33,8 +33,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.checkpoint.ckpt import (latest_step, list_steps, restore_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (latest_step, latest_valid_step, list_steps,
+                                   restore_checkpoint, save_checkpoint)
 from repro.core import elm
 from repro.core.cnn_elm import CNNELMModel, StackedMembers
 
@@ -127,6 +127,15 @@ def restore_round(ckpt_dir: str, round_idx: Optional[int] = None
 
 def latest_round(ckpt_dir: str) -> Optional[int]:
     return latest_step(ckpt_dir, ROUND)
+
+
+def latest_ready_round(ckpt_dir: str) -> Optional[int]:
+    """Newest FULLY-WRITTEN round — ``ckpt.latest_valid_step`` over the
+    round files. The serving hot-reload watcher polls this while the
+    training run is still writing: stray ``*.tmp`` files and torn
+    ``round-<r>.npz`` are skipped (and retried next poll) instead of
+    crashing the endpoint."""
+    return latest_valid_step(ckpt_dir, ROUND)
 
 
 def save_member(ckpt_dir: str, i: int, model: CNNELMModel,

@@ -11,6 +11,11 @@ actually does to a run:
   ``run_to_crash`` drives an ``AveragingRun`` into it and
   ``run_crash_resume`` closes the loop — crash, resume, return both the
   resumed and an uninterrupted reference result for equivalence checks.
+* **Torn saves** — ``inject_torn_save`` fabricates the on-disk wreckage
+  a writer killed mid-save leaves behind (truncated final ``.npz`` +
+  stray ``*.tmp``), the state the serving hot-reload poll
+  (``ckpt.latest_valid_step``) must skip + retry over instead of
+  crashing a live endpoint.
 * **Straggler-drop policies** — ``straggler_drop_schedule`` turns shard
   sizes into an ``ElasticSchedule``: members whose shard exceeds
   ``factor`` × the median row count leave at a round boundary (on the
@@ -73,6 +78,49 @@ def run_crash_resume(run: AveragingRun, partitions: Sequence[Partition],
     crashed = run_to_crash(run, partitions, key, ckpt_dir,
                            unit=unit, index=index, every=every)
     return crashed, run.resume(partitions, key, ckpt_dir)
+
+
+def inject_torn_save(ckpt_dir: str, name: str, step: int, *,
+                     keep_fraction: float = 0.5,
+                     crash: bool = True):
+    """Leave EXACTLY the on-disk wreckage of a writer killed MID-SAVE —
+    the state ``ckpt.latest_valid_step`` must skip + retry over:
+
+    * a truncated ``<name>-<step>.npz`` at the FINAL path (what a
+      non-atomic writer, an interrupted rename on a network filesystem,
+      or a torn mirror copy exposes to concurrent pollers): genuine npz
+      bytes cut at ``keep_fraction`` — the zip central directory lives at
+      the end of the file, so every reader fails cleanly;
+    * a stray in-flight ``*.tmp`` in the same directory (the aborted
+      temp write the atomic path would normally clean up).
+
+    With ``crash=True`` (default) it then raises ``InjectedCrash`` — the
+    writer process is gone, the wreckage stays. Returns
+    ``(partial_path, tmp_path)`` when ``crash=False`` (e.g. to assert
+    cleanup behaviour)."""
+    import io
+    import os
+    import tempfile
+
+    if not 0 < keep_fraction < 1:
+        raise ValueError(f"keep_fraction must be in (0, 1), "
+                         f"got {keep_fraction}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    buf = io.BytesIO()
+    np.savez(buf, payload=np.arange(4096, dtype=np.float32),
+             __meta__=np.frombuffer(b'{"step": %d}' % step, np.uint8))
+    torn = buf.getvalue()[:max(1, int(len(buf.getvalue()) * keep_fraction))]
+    partial_path = os.path.join(ckpt_dir, f"{name}-{step:08d}.npz")
+    with open(partial_path, "wb") as f:
+        f.write(torn)
+    fd, tmp_path = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(torn)
+    if crash:
+        raise InjectedCrash(
+            f"injected mid-save crash writing {name} step {step} "
+            f"(torn file at {partial_path}, stray tmp {tmp_path})")
+    return partial_path, tmp_path
 
 
 def straggler_drop_schedule(partitions: Sequence[Partition], *,

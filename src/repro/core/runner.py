@@ -385,7 +385,11 @@ class AveragingRun:
             raise ValueError("elastic runs do not checkpoint yet — nothing "
                              "to resume")
         expected = self._fingerprint(partitions)
-        latest = run_state.latest_round(ckpt_dir)
+        # the newest VALID round: a torn round-<r>.npz (writer killed
+        # mid-save without the atomic rename, torn copy on a shared fs)
+        # means that round never durably completed — resume from the
+        # newest readable one and let its re-run overwrite the wreckage
+        latest = run_state.latest_ready_round(ckpt_dir)
         if latest is not None:
             state = run_state.restore_round(ckpt_dir, latest)
             run_state.check_fingerprint(state.meta, expected)
@@ -654,7 +658,14 @@ class Ensemble:
       for these linear readouts it equals scoring the weight-averaged model
       when members share CNN features, and is the stronger rule when not);
     * ``"vote"`` — majority vote over member argmaxes (ties resolve to the
-      lowest class index, np.argmax convention).
+      LOWEST class index, np.argmax convention — the pinned rule; it
+      survives the bucketed/padded serving path too, where padded rows
+      are sliced off before any combine and therefore never vote; see
+      docs/serving.md and tests/test_serve.py).
+
+    For a production endpoint (continuous batching under a latency SLO,
+    bounded compile count, checkpoint hot-reload) see ``bucketed_scorer``
+    and ``repro.serve``.
     """
     cfg: Any
     members: StackedMembers
@@ -769,6 +780,19 @@ class Ensemble:
     def averaged(self) -> CNNELMModel:
         """The paper's Reduce over these members (uniform mean)."""
         return self.members.averaged()
+
+    def bucketed_scorer(self, max_batch: int = 64, *,
+                        use_pallas: Optional[bool] = None):
+        """The pre-jitted SERVING entry over these members: a
+        ``repro.serve.BucketedScorer`` that only ever dispatches at
+        power-of-two bucket shapes, so it compiles once per bucket and
+        never again — the compile-count guarantee behind
+        ``repro.serve.EnsembleServer`` (continuous batching + hot
+        reload). ``max_batch`` caps the ladder; ``use_pallas`` resolves
+        per the kernel backend policy like every other eval entry."""
+        from repro.serve.engine import BucketedScorer
+        return BucketedScorer(self.cfg, self.members, max_batch=max_batch,
+                              use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,20 @@
+"""Production ensemble serving — the millions-of-users surface over
+``runner.Ensemble`` (docs/serving.md has the full contracts).
+
+* ``BucketLadder`` / ``BucketedScorer`` — bucketed batch shapes: one XLA
+  compile per bucket, ever (``assert_compile_budget`` guards it), with
+  pad-and-mask scoring where padded rows never vote.
+* ``EnsembleServer`` / ``ServeConfig`` — request queue + continuous
+  batching under a latency SLO (flush on max-batch OR max-wait).
+* ``CheckpointWatcher`` — hot-reload: poll a training run's checkpoint
+  dir, swap stacked weights between batches with zero dropped requests.
+* ``run_open_loop`` / ``LoadReport`` — synthetic open-loop load with
+  p50/p95/p99 + images/s reporting.
+"""
+from repro.serve.bucketing import BucketLadder
+from repro.serve.engine import (BucketedScorer, SwapRejected,  # noqa: F401
+                                combine_block)
+from repro.serve.hot_reload import CheckpointWatcher, SwapEvent  # noqa: F401
+from repro.serve.loadgen import LoadReport, run_open_loop  # noqa: F401
+from repro.serve.scheduler import (EnsembleServer, QueueFull,  # noqa: F401
+                                   ServeConfig, ServeResult, ServerStats)
