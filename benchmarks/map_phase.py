@@ -328,6 +328,7 @@ def run_mesh(k: int = 8, n_per_class: int = 80, epochs: int = 2,
             return json.load(f)
 
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.analysis.hlo import ContractViolation, check_one_all_reduce
     from repro.core import executor
     from repro.launch.hlo_analysis import collective_stats
 
@@ -383,13 +384,15 @@ def run_mesh(k: int = 8, n_per_class: int = 80, epochs: int = 2,
     ex._begin(cfg, k)
     params_k = ex._place_params(cnn.init_params(cfg, KEY))
     w = ex._weights_dev(None)
-    sync_cs = collective_stats(executor._mesh_sync.lower(
-        mesh, params_k, w).compile().as_text())
+    sync_hlo = executor._mesh_sync.lower(
+        mesh, params_k, w).compile().as_text()
+    sync_cs = collective_stats(sync_hlo)
     beta_k = jax.device_put(
         jnp.zeros((ex._k_pad, cnn.feature_dim(cfg), cfg.num_classes)),
         NamedSharding(mesh, P("pod")))
-    red_cs = collective_stats(executor._mesh_reduce.lower(
-        mesh, (params_k, beta_k), w).compile().as_text())
+    red_hlo = executor._mesh_reduce.lower(
+        mesh, (params_k, beta_k), w).compile().as_text()
+    red_cs = collective_stats(red_hlo)
 
     payload = {
         "stacked_us": st_us,
@@ -413,12 +416,14 @@ def run_mesh(k: int = 8, n_per_class: int = 80, epochs: int = 2,
         "backend": jax.default_backend(),
     }
     # the contract gate runs BEFORE anything is persisted — a violation
-    # must not leave a fresh-but-invalid artifact for later readers
-    if payload["allreduce_per_sync"] != 1 or \
-            payload["allreduce_per_reduce"] != 1:
-        raise AssertionError(
-            f"one-collective contract violated: sync="
-            f"{sync_cs.count_by_kind} reduce={red_cs.count_by_kind}")
+    # must not leave a fresh-but-invalid artifact for later readers;
+    # collective_stats above stays for the per-chip-bytes cost model,
+    # the pass/fail verdict is the auditor's
+    for label, hlo in (("sync", sync_hlo), ("reduce", red_hlo)):
+        check = check_one_all_reduce(hlo, name=f"one-all-reduce/{label}")
+        if not check.ok:
+            raise ContractViolation(
+                f"one-collective contract violated: {check}")
     save_result("BENCH_map_phase_mesh", payload, out_dir=out_dir)
     emit(f"map_phase_stacked_k{k}_e{epochs}_baseline", st_us, "single device")
     for row in sweep:

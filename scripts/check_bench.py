@@ -1,0 +1,219 @@
+#!/usr/bin/env python
+"""Schema-validate the checked-in ``experiments/BENCH_*.json`` artifacts.
+
+Every benchmark in ``benchmarks/`` persists a JSON payload via
+``benchmarks.common.save_result``; these artifacts are read back by
+``docs/perf.md`` readers and by later sessions deciding whether a
+regression is real. A malformed or contract-violating artifact is worse
+than a missing one, so CI runs this gate (``.github/workflows/ci.yml``,
+``analysis`` job) on every push.
+
+Validation is hand-rolled on purpose: the container's CI environment
+installs only ``constraints.txt`` (no ``jsonschema``), and the spec
+grammar below is ~40 lines — a type, a list of specs, or a dict of
+required keys (extra keys are allowed so benchmarks can grow fields
+without breaking the gate). Cross-field invariants — the one-all-reduce
+counts in the mesh artifact, the serve compile budget — ride along as
+named predicates, mirroring what ``repro.analysis.hlo`` enforces on the
+compiled programs themselves.
+
+Usage::
+
+    python scripts/check_bench.py                # all experiments/BENCH_*.json
+    python scripts/check_bench.py path/to/BENCH_foo.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+NUM = (int, float)          # json has no int/float wall; timings may round
+
+
+# ---------------------------------------------------------------------------
+# The ~40-line validator: spec = type | tuple-of-types | [item_spec]
+#                              | {key: spec, ...}  (required keys, extras ok)
+# ---------------------------------------------------------------------------
+
+def _check(value, spec, path, errors):
+    if isinstance(spec, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected object, got "
+                          f"{type(value).__name__}")
+            return
+        for key, sub in spec.items():
+            if key not in value:
+                errors.append(f"{path}.{key}: missing required key")
+            else:
+                _check(value[key], sub, f"{path}.{key}", errors)
+    elif isinstance(spec, list):
+        if not isinstance(value, list):
+            errors.append(f"{path}: expected array, got "
+                          f"{type(value).__name__}")
+            return
+        for i, item in enumerate(value):
+            _check(item, spec[0], f"{path}[{i}]", errors)
+    else:
+        # bool is an int subclass in Python; don't let True satisfy int
+        if isinstance(value, bool) and spec is not bool and \
+                not (isinstance(spec, tuple) and bool in spec):
+            errors.append(f"{path}: expected {_name(spec)}, got bool")
+        elif not isinstance(value, spec):
+            errors.append(f"{path}: expected {_name(spec)}, got "
+                          f"{type(value).__name__}")
+
+
+def _name(spec):
+    if isinstance(spec, tuple):
+        return "|".join(t.__name__ for t in spec)
+    return spec.__name__
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact schemas + cross-field invariants
+# ---------------------------------------------------------------------------
+
+_LOAD_ROW = {"offered_per_s": NUM, "submitted": int, "completed": int,
+             "failed": int, "duration_s": NUM, "achieved_per_s": NUM,
+             "p50_ms": NUM, "p95_ms": NUM, "p99_ms": NUM, "mean_ms": NUM}
+
+_SWEEP_ROW = {"devices": int, "mesh_us": NUM, "speedup_vs_stacked": NUM,
+              "k_pad": int, "members_per_pod": int, "pad_members": int,
+              "dispatches": int, "round_syncs": int}
+
+SCHEMAS = {
+    "BENCH_map_phase": {
+        "sequential_us": NUM, "stacked_us": NUM, "speedup": NUM,
+        "sequential_dispatches": int, "stacked_dispatches": int,
+        "k": int, "epochs": int, "num_batches": int, "batch_size": int,
+        "feature_dim": int, "backend": str,
+    },
+    "BENCH_map_phase_chunked": {
+        "monolithic_us": NUM, "chunked_us": NUM, "overhead": NUM,
+        "bit_identical": bool, "k": int, "epochs": int,
+        "num_batches": int, "chunk_batches": int, "epoch_bytes": int,
+        "chunk_bytes": int, "peak_bytes": int, "batch_size": int,
+        "backend": str,
+    },
+    "BENCH_map_phase_mesh": {
+        "stacked_us": NUM, "sweep": [_SWEEP_ROW], "k": int, "epochs": int,
+        "rounds": int, "batch_size": int, "feature_dim": int,
+        "allreduce_per_sync": int, "allreduce_per_reduce": int,
+        "sync_collective_per_chip_bytes": NUM,
+        "reduce_collective_per_chip_bytes": NUM,
+        "cost_model": str, "backend": str,
+    },
+    "BENCH_map_phase_rounds": {
+        "single_round_us": NUM, "multi_round_us": NUM,
+        "sync_overhead": NUM, "k": int, "epochs": int, "rounds": int,
+        "epochs_per_round": int, "round_dispatches": [int],
+        "round_sync_dispatches": int, "total_dispatches": int,
+        "batch_size": int, "backend": str,
+    },
+    "BENCH_map_phase_unequal": {
+        "sequential_us": NUM, "stacked_us": NUM, "speedup": NUM,
+        "k": int, "epochs": int, "shard_sizes": [int],
+        "batch_counts": [int], "padded_batches": int,
+        "pad_fraction": NUM, "batch_size": int, "feature_dim": int,
+        "backend": str,
+    },
+    "BENCH_elastic_resume": {
+        "crash_resume": {"stacked": dict, "sequential": dict},
+        "elastic": {"static_us": NUM, "elastic_us": NUM,
+                    "churn_overhead": NUM, "shard_sizes": [int],
+                    "members_per_round": [int], "static_acc": NUM,
+                    "elastic_acc": NUM},
+        "k": int, "n_per_class": int, "epochs": int, "rounds": int,
+        "batch_size": int, "backend": str,
+    },
+    "BENCH_serve_ensemble": {
+        "k": int, "max_batch": int, "max_wait_ms": NUM,
+        "n_requests_per_load": int, "buckets": [int],
+        "compile_count": int, "batches": int,
+        "mean_batch_occupancy": NUM,
+        "hot_swap": {"swaps": int, "failed": int, "dropped": int,
+                     "recompiles": int},
+        "loads": [_LOAD_ROW],
+    },
+}
+
+# the same averaging contracts repro.analysis.hlo proves on compiled
+# programs, re-checked on the persisted measurement record
+INVARIANTS = {
+    "BENCH_map_phase_mesh": [
+        ("one all-reduce per sync",
+         lambda d: d["allreduce_per_sync"] == 1),
+        ("one all-reduce per reduce",
+         lambda d: d["allreduce_per_reduce"] == 1),
+        ("sweep devices strictly increasing",
+         lambda d: all(a["devices"] < b["devices"] for a, b in
+                       zip(d["sweep"], d["sweep"][1:]))),
+    ],
+    "BENCH_serve_ensemble": [
+        ("compile count within bucket budget",
+         lambda d: d["compile_count"] <= len(d["buckets"])),
+        ("zero hot-swap recompiles",
+         lambda d: d["hot_swap"]["recompiles"] == 0),
+        ("bucket ladder strictly increasing",
+         lambda d: all(a < b for a, b in
+                       zip(d["buckets"], d["buckets"][1:]))),
+    ],
+    "BENCH_map_phase": [
+        ("stacked dispatch count is O(1), not O(k*epochs)",
+         lambda d: d["stacked_dispatches"] < d["sequential_dispatches"]),
+    ],
+    "BENCH_map_phase_chunked": [
+        ("chunked peak stays under the monolithic epoch buffer",
+         lambda d: d["peak_bytes"] < d["epoch_bytes"]),
+    ],
+}
+
+
+def check_file(path: Path):
+    """-> list of error strings (empty = valid)."""
+    stem = path.stem
+    if stem not in SCHEMAS:
+        return [f"{path.name}: no schema for {stem!r} — add one to "
+                f"scripts/check_bench.py when adding a benchmark"]
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable JSON: {e}"]
+    errors: list = []
+    _check(data, SCHEMAS[stem], stem, errors)
+    if not errors:                     # invariants assume shape holds
+        for label, pred in INVARIANTS.get(stem, ()):
+            try:
+                ok = pred(data)
+            except Exception as e:     # a broken predicate is a finding
+                ok, label = False, f"{label} (predicate raised: {e})"
+            if not ok:
+                errors.append(f"{stem}: invariant violated: {label}")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    paths = [Path(a) for a in args] if args else \
+        sorted((ROOT / "experiments").glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench: no BENCH_*.json artifacts found",
+              file=sys.stderr)
+        return 2
+    failures = 0
+    for p in paths:
+        errors = check_file(p)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(f"FAIL {e}")
+        else:
+            print(f"ok   {p.name}")
+    print(f"check_bench: {len(paths)} artifacts, {failures} invalid")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""``repro.analysis`` — the repo's contract-enforcement layer.
+
+The paper's MapReduce-on-classifier-level design is only correct if every
+backend computes the *same* weighted average; the invariants that
+guarantee it (one all-reduce per Reduce, zero per-epoch collectives,
+f32 accumulation, the ``seed + i`` member-seed rule, donated scan
+carries, the serve compile budget) used to live as hand-placed
+assertions. This package turns them into machine-checked contracts:
+
+* **Tier 1 — AST lint** (``repro.analysis.lint`` + ``repro.analysis.rules``):
+  JAX-aware static rules run over the source tree, with inline
+  ``# repro: allow(<rule>)`` suppressions, a checked-in baseline and a
+  fail-on-new-violations CI mode. ``python -m repro.analysis`` is the CLI.
+* **Tier 2 — compiled-artifact audit** (``repro.analysis.hlo``): lowers
+  the actual executor/scorer programs and checks contracts on the
+  compiled HLO — collective counts, donation aliasing, accumulator
+  dtypes, jit-cache compile budgets — via ``audit_executor(backend=...)``
+  and ``audit_scorer(...)``.
+
+See ``docs/analysis.md`` for the rule catalog and auditor API.
+"""
+from repro.analysis.lint import (DEFAULT_ROOTS, Finding, LintReport,  # noqa: F401
+                                 lint_file, lint_paths, load_baseline,
+                                 write_baseline)
+from repro.analysis.rules import RULES, Rule, get_rules  # noqa: F401
+
+# NOTE: repro.analysis.hlo is intentionally NOT imported here — it pulls
+# in jax and the executor stack, which the pure-AST CLI path never needs.
+# ``from repro.analysis import hlo`` explicitly when auditing artifacts.

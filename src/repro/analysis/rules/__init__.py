@@ -1,0 +1,79 @@
+"""The pluggable lint-rule registry.
+
+A rule is a named check over one parsed module. The engine
+(``repro.analysis.lint``) hands every rule a ``ModuleContext`` — the
+path, source, AST, and the set of TRACED function nodes (functions that
+execute under ``jax.jit`` / ``lax.scan`` / ``shard_map`` / ``vmap``
+tracing, where host-side Python is a correctness bug rather than a
+style issue) — and collects ``(line, col, message)`` findings.
+
+Register a rule with the ``@rule`` decorator::
+
+    @rule("my-rule", "one-line summary of the contract it enforces")
+    def my_rule(ctx):
+        for node in ast.walk(ctx.tree):
+            ...
+            yield node.lineno, node.col_offset, "what went wrong"
+
+``paths=`` scopes a rule to files whose repo-relative posix path matches
+the given regex (e.g. the serve-only compile-budget rule). Rules are
+discovered by importing ``repro.analysis.rules.jax_rules``; add new rule
+modules to ``_RULE_MODULES`` below (docs/analysis.md §Adding a rule).
+"""
+from __future__ import annotations
+
+import importlib
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, Optional
+
+RULES: Dict[str, "Rule"] = {}
+
+_RULE_MODULES = ("repro.analysis.rules.jax_rules",)
+_LOADED = False
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One registered lint rule: ``check(ctx)`` yields
+    ``(line, col, message)`` tuples for every violation in the module."""
+    name: str
+    summary: str
+    check: Callable
+    paths: Optional[str] = None            # repo-relative path regex scope
+    _pattern: object = field(default=None, compare=False, repr=False)
+
+    def applies_to(self, relpath: str) -> bool:
+        if self.paths is None:
+            return True
+        return re.search(self.paths, relpath) is not None
+
+
+def rule(name: str, summary: str, *, paths: Optional[str] = None):
+    """Decorator: register ``fn`` as lint rule ``name``."""
+    if not re.fullmatch(r"[a-z0-9][a-z0-9-]*", name):
+        raise ValueError(f"rule names are kebab-case, got {name!r}")
+
+    def wrap(fn):
+        if name in RULES:
+            raise ValueError(f"duplicate rule {name!r}")
+        RULES[name] = Rule(name, summary, fn, paths=paths)
+        return fn
+
+    return wrap
+
+
+def get_rules(names: Optional[Iterable[str]] = None) -> Dict[str, Rule]:
+    """The registry (loading rule modules on first use); ``names``
+    restricts to a subset and raises on unknown names."""
+    global _LOADED
+    if not _LOADED:
+        _LOADED = True
+        for mod in _RULE_MODULES:
+            importlib.import_module(mod)
+    if names is None:
+        return dict(RULES)
+    unknown = [n for n in names if n not in RULES]
+    if unknown:
+        raise KeyError(f"unknown rule(s) {unknown}; known: {sorted(RULES)}")
+    return {n: RULES[n] for n in names}

@@ -28,7 +28,8 @@ from repro.data.partition import (epoch_batch_arrays, partition_iid,
                                   partition_unequal)
 from repro.data.synthetic import make_extended_mnist, one_hot
 from repro.distributed import sharding
-from repro.launch.hlo_analysis import collective_stats
+from repro.analysis.hlo import (audit_executor, check_donation,
+                                check_no_collectives, check_one_all_reduce)
 from repro.models import cnn
 from repro.optim.schedules import dynamic_paper
 
@@ -178,32 +179,41 @@ def _placed(mesh, k, pods):
 def test_sync_and_reduce_lower_to_one_allreduce():
     """The acceptance assertion: the compiled inter-round sync AND the
     final Reduce each contain EXACTLY ONE all-reduce (the flat-psum
-    contract), and the epoch scan contains ZERO collectives."""
+    contract), and the epoch scan contains ZERO collectives — all read
+    off the compiled artifacts by the ``repro.analysis.hlo`` auditor."""
     mesh = _mesh(8)
     ex, params_k, stats_k = _placed(mesh, 3, 8)
     w = ex._weights_dev(None)
 
-    sync_hlo = executor._mesh_sync.lower(
-        mesh, params_k, w).compile().as_text()
-    assert collective_stats(sync_hlo).count_by_kind == {"all-reduce": 1}
+    sync = executor._mesh_sync.lower(mesh, params_k, w)
+    check = check_one_all_reduce(sync)
+    assert check.ok, check
 
     beta_k = jax.device_put(
         jnp.zeros((8, cnn.feature_dim(CFG), CFG.num_classes)),
         NamedSharding(mesh, P("pod")))
-    red_hlo = executor._mesh_reduce.lower(
-        mesh, (params_k, beta_k), w).compile().as_text()
-    assert collective_stats(red_hlo).count_by_kind == {"all-reduce": 1}
+    red = executor._mesh_reduce.lower(mesh, (params_k, beta_k), w)
+    check = check_one_all_reduce(red)
+    assert check.ok, check
 
     B, nb = 16, 2
     xb = np.zeros((nb, 8, B) + CFG_IMG, np.float32)
     tb = np.zeros((nb, 8, B, CFG.num_classes), np.float32)
     mb = np.zeros((nb, 8), np.float32)
     cur = ex._put_chunk((xb, tb, mb))
-    ep_hlo = executor._mesh_epoch.lower(
+    ep = executor._mesh_epoch.lower(
         CFG, mesh, params_k, stats_k, *cur, jnp.float32(0.0),
-        solve_each_batch=True, use_pallas=False,
-        masked=True).compile().as_text()
-    assert collective_stats(ep_hlo).count_by_kind == {}
+        solve_each_batch=True, use_pallas=False, masked=True)
+    for check in (check_no_collectives(ep), check_donation(ep)):
+        assert check.ok, check
+
+
+def test_full_mesh_audit_is_green():
+    """``audit_executor(..., "mesh")`` — the one-call CI entry point —
+    passes every check on the real MeshExecutor programs."""
+    mesh = _mesh(8)
+    for report in audit_executor(CFG, "mesh", mesh=mesh, k=3):
+        assert report.ok, str(report)
 
 
 def test_solve_and_params_stay_pod_sharded():
@@ -292,8 +302,8 @@ def test_trainer_average_step_mesh_variant():
     for la, lb in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
                                    rtol=1e-5, atol=1e-6)
-    hlo = step.lower(placed).compile().as_text()
-    assert collective_stats(hlo).count_by_kind == {"all-reduce": 1}
+    check = check_one_all_reduce(step.lower(placed))
+    assert check.ok, check
     # weighted: shard-size weights flow into the same single collective
     w = [float(i + 1) for i in range(k)]
     outw = jax.jit(trainer.make_average_step(weights=w, mesh=mesh))(placed)
