@@ -11,9 +11,10 @@ def main() -> None:
     failures = []
     from benchmarks import (e2lm_scaling, elastic_resume, fig7_iterations,
                             kernel_bench, map_phase, roofline,
-                            serve_ensemble, table23_notmnist, table45_mnist)
+                            serve_ensemble, stream_map, table23_notmnist,
+                            table45_mnist)
     for mod in (kernel_bench, e2lm_scaling, map_phase, elastic_resume,
-                serve_ensemble, table45_mnist, table23_notmnist,
+                serve_ensemble, stream_map, table45_mnist, table23_notmnist,
                 fig7_iterations, roofline):
         try:
             mod.main()

@@ -137,7 +137,27 @@ SCHEMAS = {
                      "recompiles": int},
         "loads": [_LOAD_ROW],
     },
+    "BENCH_stream_map": {
+        "k": int, "n_chunks": int, "chunk_rows": int, "drift_at": int,
+        "window_chunks": int, "cadence": int, "backend": str,
+        "policies": [{"policy": str, "syncs": int, "sync_chunks": [int],
+                      "published_acc": NUM, "fresh_acc": NUM,
+                      "wall_us": NUM, "dispatches": int}],
+        "window_gate": {"max_abs_error": NUM, "pushed": int,
+                        "evicted": int, "capacity": int, "ok": bool},
+        "recovery": {"score_at_drift": NUM, "score_end": NUM},
+        "file_source": {"files": int, "chunks": int,
+                        "ragged_rows_per_file": int,
+                        "matches_array_source": bool},
+        "serve": {"first_round": int, "staged_round": int, "swaps": int,
+                  "failed": int, "dropped": int, "recompiles": int,
+                  "buckets": [int], "compile_count": int},
+    },
 }
+
+
+def _policy(d, name):
+    return next(r for r in d["policies"] if r["policy"] == name)
 
 # the same averaging contracts repro.analysis.hlo proves on compiled
 # programs, re-checked on the persisted measurement record
@@ -167,6 +187,32 @@ INVARIANTS = {
     "BENCH_map_phase_chunked": [
         ("chunked peak stays under the monolithic epoch buffer",
          lambda d: d["peak_bytes"] < d["epoch_bytes"]),
+    ],
+    "BENCH_stream_map": [
+        ("drift-triggered sync beats never-sync on the post-drift "
+         "concept",
+         lambda d: _policy(d, "drift")["published_acc"] >
+         _policy(d, "never")["published_acc"]),
+        ("never-sync published exactly the initial model",
+         lambda d: _policy(d, "never")["syncs"] == 1),
+        ("drift policy fired after the injected shift",
+         lambda d: any(c > d["drift_at"] for c in
+                       _policy(d, "drift")["sync_chunks"])),
+        ("prequential score recovered after the shift",
+         lambda d: d["recovery"]["score_end"] >
+         d["recovery"]["score_at_drift"]),
+        ("window downdates passed the equivalence gate after real "
+         "evictions",
+         lambda d: d["window_gate"]["ok"] and
+         d["window_gate"]["evicted"] > 0),
+        ("file stream replays the array stream chunk-for-chunk",
+         lambda d: d["file_source"]["matches_array_source"]),
+        ("watcher staged a non-consecutive drift round",
+         lambda d: d["serve"]["staged_round"] -
+         d["serve"]["first_round"] > 1),
+        ("zero hot-swap recompiles across irregular rounds",
+         lambda d: d["serve"]["recompiles"] == 0 and
+         d["serve"]["compile_count"] <= len(d["serve"]["buckets"])),
     ],
 }
 

@@ -29,17 +29,18 @@ crash while training member j resumes by training only members j..k-1.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.checkpoint.ckpt import (latest_step, latest_valid_step, list_steps,
                                    restore_checkpoint, save_checkpoint)
-from repro.core import elm
+from repro.core import elastic, elm
 from repro.core.cnn_elm import CNNELMModel, StackedMembers
 
 ROUND = "round"
 MEMBER = "member"
+ELASTIC = "eround"
 
 
 def run_fingerprint(backend: str, partitions, *, seed: int, epochs: int,
@@ -136,6 +137,107 @@ def latest_ready_round(ckpt_dir: str) -> Optional[int]:
     ``round-<r>.npz`` are skipped (and retried next poll) instead of
     crashing the endpoint."""
     return latest_valid_step(ckpt_dir, ROUND)
+
+
+# ---------------------------------------------------------------------------
+# Elastic rounds — checkpointing a run under membership churn
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ElasticRoundState:
+    """One restored ``eround-<r>`` checkpoint: the full ``ElasticGroup``
+    (living members' params/steps/stats, retired weighted contributions)
+    plus the membership bookkeeping the elastic runner needs to continue
+    bit-identically — who is living (in join order), each member's id
+    (which pins its ``seed + id`` rng stream), the round it joined at
+    (which pins its ``start_epochs`` fast-forward), the next joiner id
+    and the boundary average every member was reset to (``cur_init``)."""
+    round: int
+    group: elastic.ElasticGroup
+    cur_init: object                     # post-boundary shared CNN init
+    living: List[str]                    # join order
+    joined_round: Dict[str, int]
+    member_id: Dict[str, int]
+    next_id: int
+    meta: dict
+
+    @property
+    def final(self) -> bool:
+        return bool(self.meta.get("final"))
+
+
+def save_elastic_round(ckpt_dir: str, round_idx: int, *,
+                       group: elastic.ElasticGroup, cur_init,
+                       joined_round: Dict[str, int],
+                       member_id: Dict[str, int], next_id: int,
+                       meta: dict) -> str:
+    """Snapshot the POST-boundary state of elastic round ``round_idx``:
+    leavers already retired, the sync applied, joiners admitted. Member
+    names become tree keys (they are ``m<id>``, so they never collide
+    with the '/'-path or '#<i>'-tuple encodings of ``ckpt``)."""
+    members_tree = {}
+    for name, mm in group.members.items():
+        sub = {"params": mm.params,
+               "steps": np.asarray(mm.steps, np.float64)}
+        if mm.stats is not None:
+            sub["stats"] = _stats_tree(mm.stats)
+        members_tree[name] = sub
+    tree = {
+        "members": members_tree,
+        "retired_params": [(p, np.asarray(w, np.float64))
+                           for p, w in group.retired_params],
+        "retired_stats": [_stats_tree(s) for s in group.retired_stats],
+        "cur_init": cur_init,
+    }
+    living = sorted(group.members, key=member_id.get)     # join order
+    meta = {**meta,
+            "living": living,
+            "joined_round": {n: int(joined_round[n]) for n in living},
+            "member_id": {n: int(member_id[n]) for n in living},
+            "next_id": int(next_id)}
+    return save_checkpoint(ckpt_dir, ELASTIC, round_idx, tree, meta)
+
+
+def restore_elastic_round(ckpt_dir: str, round_idx: Optional[int] = None
+                          ) -> ElasticRoundState:
+    """Rebuild the ``ElasticGroup`` EXACTLY: members re-inserted in join
+    order (``reduce_params`` sums in dict order, so insertion order is
+    part of the bit-identity contract), retired entries in append order
+    (``ckpt`` restores lists as tuples — normalised back to lists)."""
+    if round_idx is None:
+        round_idx = latest_step(ckpt_dir, ELASTIC)
+        if round_idx is None:
+            raise FileNotFoundError(
+                f"no '{ELASTIC}' checkpoint in {ckpt_dir}")
+    tree, meta = restore_checkpoint(ckpt_dir, ELASTIC, round_idx)
+    md = meta["metadata"]
+    member_id = {n: int(i) for n, i in md["member_id"].items()}
+    group = elastic.ElasticGroup()
+    for name in sorted(tree["members"], key=member_id.get):
+        sub = tree["members"][name]
+        group.members[name] = elastic.Member(
+            params=sub["params"], steps=float(sub["steps"]),
+            stats=_tree_stats(sub["stats"]) if "stats" in sub else None)
+    # empty lists serialise to no keys at all — .get them back as empty
+    group.retired_params = [(p, float(w))
+                            for p, w in tree.get("retired_params", ())]
+    group.retired_stats = [_tree_stats(s)
+                           for s in tree.get("retired_stats", ())]
+    return ElasticRoundState(
+        round=round_idx, group=group, cur_init=tree["cur_init"],
+        living=list(md["living"]),
+        joined_round={n: int(r) for n, r in md["joined_round"].items()},
+        member_id=member_id, next_id=int(md["next_id"]), meta=md)
+
+
+def latest_elastic_round(ckpt_dir: str) -> Optional[int]:
+    return latest_step(ckpt_dir, ELASTIC)
+
+
+def latest_ready_elastic_round(ckpt_dir: str) -> Optional[int]:
+    """Newest FULLY-WRITTEN elastic round (torn files skipped — the same
+    validity probe as ``latest_ready_round``)."""
+    return latest_valid_step(ckpt_dir, ELASTIC)
 
 
 def save_member(ckpt_dir: str, i: int, model: CNNELMModel,

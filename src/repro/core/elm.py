@@ -63,6 +63,19 @@ def add_stats(a: ELMStats, b: ELMStats) -> ELMStats:
     return ELMStats(a.u + b.u, a.v + b.v, a.n + b.n)
 
 
+def downdate_stats(a: ELMStats, b: ELMStats) -> ELMStats:
+    """Rank-DOWNdate: remove ``b``'s contribution from ``a``.
+
+    U and V are plain sums over rows of H, so forgetting a chunk is exact
+    subtraction of that chunk's recorded stats — the sliding-window
+    streaming Map phase (``repro.stream.window``) evicts old chunks this
+    way instead of recomputing the window from scratch. Subtraction in f32
+    is not bit-exact against never-adding (float add is not associative),
+    which is why the window carries an equivalence gate
+    (``SlidingWindowStats.verify``) instead of an equality assert."""
+    return ELMStats(a.u - b.u, a.v - b.v, a.n - b.n)
+
+
 def _cho_solve_beta(u, v, lam: float) -> jax.Array:
     """β = (I/λ + U)⁻¹ V: one Cholesky factorisation, reused for both
     triangular solves. Accepts unbatched (L, L)/(L, C) or member-stacked

@@ -133,6 +133,10 @@ class ExecutionPlan:
     ``start_epochs`` fast-forwards each member's stream by that many
     permutation draws — the elastic runner's stream-continuation contract
     (a member keeps ONE rng stream across round blocks).
+    ``member_init`` gives each member its OWN initial params (a k-list of
+    trees) instead of broadcasting the shared ``init_params`` — the
+    streaming runner's block-continuation contract (members diverge
+    between syncs); backends ``sequential`` and ``stacked`` only.
     """
     epochs: int = 0
     lr_schedule: Optional[Callable[[int], float]] = None
@@ -149,6 +153,7 @@ class ExecutionPlan:
     completed: Optional[dict] = None
     member_seeds: Optional[Sequence[int]] = None
     start_epochs: Optional[Sequence[int]] = None
+    member_init: Optional[Sequence] = None
 
 
 @dataclass
@@ -187,6 +192,17 @@ def _member_seeds(plan: ExecutionPlan, k: int) -> List[int]:
     if len(seeds) != k:
         raise ValueError(f"{len(seeds)} member_seeds for {k} partitions")
     return seeds
+
+
+def _member_inits(plan: ExecutionPlan, k: int) -> Optional[List]:
+    """Validated per-member init trees, or None for the shared init."""
+    if plan.member_init is None:
+        return None
+    inits = list(plan.member_init)
+    if len(inits) != k:
+        raise ValueError(f"{len(inits)} member_init trees for "
+                         f"{k} partitions")
+    return inits
 
 
 def _stream_burns(plan: ExecutionPlan, k: int, per_round: int) -> List[int]:
@@ -232,6 +248,7 @@ class SequentialExecutor:
         k = len(partitions)
         seeds = _member_seeds(plan, k)
         burns = _stream_burns(plan, k, 0)
+        inits = _member_inits(plan, k)
         ck = plan.checkpoint
         done = dict(plan.completed or {})
         meta = run_state.run_fingerprint(
@@ -247,7 +264,8 @@ class SequentialExecutor:
                 for _ in range(burns[i]):
                     rng.permutation(len(p.x))
                 model, stats = train_member(
-                    cfg, init_params, p, epochs=plan.epochs,
+                    cfg, init_params if inits is None else inits[i], p,
+                    epochs=plan.epochs,
                     lr_schedule=plan.lr_schedule,
                     batch_size=plan.batch_size, seed=rng,
                     use_pallas=plan.use_pallas, telemetry=plan.telemetry,
@@ -352,7 +370,9 @@ class _StackedBase:
                                 _stream_burns(plan, k, per_round)):
             for _ in range(burn):
                 rng.permutation(len(p.x))
-        params_k = self._place_params(init_params)
+        inits = _member_inits(plan, k)
+        params_k = (self._place_params(init_params) if inits is None
+                    else self._place_member_params(inits))
 
         round_passes = [[(False, 0.0)]] if plan.epochs == 0 else [
             [(True, float(plan.lr_schedule(r * per_round + e)))
@@ -469,6 +489,12 @@ class _StackedBase:
     def _begin(self, cfg, k):
         """Per-run setup (member counts, mesh checks)."""
 
+    def _place_member_params(self, inits):
+        raise ValueError(
+            f"plan.member_init is not supported on backend {self.name!r} — "
+            f"the mesh layout would re-pad and re-shard per-member trees "
+            f"mid-run; streaming blocks run on 'sequential' or 'stacked'")
+
     def _pad_epoch(self, xb, tb, mb):
         return xb, tb, mb
 
@@ -494,6 +520,16 @@ class StackedExecutor(_StackedBase):
 
     def _place_params(self, init_params):
         params_k = broadcast_member_dim(init_params, self._k)
+        if self.mesh is not None:
+            params_k = jax.device_put(
+                params_k, sharding.member_dim_shardings(params_k, self.mesh))
+        return params_k
+
+    def _place_member_params(self, inits):
+        # per-member trees stacked on the member dim — the streaming
+        # block-continuation init (same placement rules as the broadcast)
+        params_k = jax.tree.map(lambda *xs: jnp.stack(
+            [jnp.asarray(x) for x in xs]), *inits)
         if self.mesh is not None:
             params_k = jax.device_put(
                 params_k, sharding.member_dim_shardings(params_k, self.mesh))

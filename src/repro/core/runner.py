@@ -81,6 +81,7 @@ from repro.models import cnn
 
 STRATEGIES = ("uniform", "shard_weighted")
 COMBINES = ("mean", "vote")
+SYNCS = ("rounds", "drift")
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +201,14 @@ class ReduceConfig:
     ``broadcast_member_dim`` program; backend ``"mesh"``: one in-mesh
     all-reduce, params never leave the mesh between rounds).
 
+    ``sync`` — WHEN the averaging events fire. ``"rounds"`` (default) is
+    everything above: a fixed count of evenly spaced syncs. ``"drift"``
+    fires the same one-all-reduce average when a member's held-out score
+    signals concept drift instead — the STREAMING policy: it needs the
+    per-chunk drift detectors of ``repro.stream.StreamingRun``, so this
+    batch runner (fixed partitions, no drift signal) rejects it with a
+    pointer there.
+
     ``elastic`` — an ``ElasticSchedule`` of join/leave events applied at
     round boundaries (``repro.core.elastic.ElasticGroup`` semantics:
     joiners start from the boundary average, leavers keep a retired
@@ -211,14 +220,25 @@ class ReduceConfig:
     (re-stacked per round block); needs ``rounds >= 2`` and SGD epochs."""
     strategy: Union[str, Sequence[float]] = "uniform"
     rounds: int = 1
+    sync: str = "rounds"
     elastic: Optional[ElasticSchedule] = None
 
     def __post_init__(self):
         if isinstance(self.strategy, str) and self.strategy not in STRATEGIES:
             raise ValueError(f"strategy must be one of {STRATEGIES} or an "
                              f"explicit weight sequence, got {self.strategy!r}")
+        if self.sync not in SYNCS:
+            raise ValueError(f"sync must be one of {SYNCS}, "
+                             f"got {self.sync!r}")
         if self.rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.sync == "drift" and self.rounds != 1:
+            raise ValueError(
+                "sync='drift' replaces the rounds cadence — leave rounds=1 "
+                "(drift-triggered syncs fire per chunk, not per round)")
+        if self.sync == "drift" and self.elastic is not None:
+            raise ValueError("sync='drift' does not combine with an elastic "
+                             "schedule")
         if self.elastic is not None:
             if not isinstance(self.elastic, ElasticSchedule):
                 raise ValueError("elastic must be an ElasticSchedule")
@@ -323,6 +343,7 @@ class ElasticRunResult:
     wall_time_s: float
     dispatches: int
     backend: str
+    resumed: bool = False    # True when rebuilt/continued from a checkpoint
 
     def ensemble(self, combine: str = "mean") -> "Ensemble":
         """The surviving members as a batched scoring surface."""
@@ -358,13 +379,15 @@ class AveragingRun:
         checkpointed intermediate rounds pay their β solve + averaged-model
         build (they are saved), where hook-less uncheckpointed rounds
         skip both."""
+        if self.reduce_cfg.sync == "drift":
+            raise ValueError(
+                "ReduceConfig(sync='drift') is the streaming policy — it "
+                "needs per-chunk drift detectors, so drive it through "
+                "repro.stream.StreamingRun; this batch runner syncs on "
+                "the rounds cadence")
         if self.reduce_cfg.elastic is not None:
-            if checkpoint is not None:
-                raise ValueError(
-                    "checkpoint/resume of an elastic run is not supported "
-                    "yet — run the elastic schedule without a checkpoint, "
-                    "or checkpoint a fixed-membership run")
-            return self._run_elastic(partitions, key, round_hook)
+            return self._run_elastic(partitions, key, round_hook,
+                                     checkpoint=checkpoint)
         return self._run(partitions, key, round_hook=round_hook,
                          checkpoint=checkpoint)
 
@@ -382,8 +405,8 @@ class AveragingRun:
         ``RunResult.rounds`` covers only the re-run rounds."""
         m, rc = self.map_cfg, self.reduce_cfg
         if rc.elastic is not None:
-            raise ValueError("elastic runs do not checkpoint yet — nothing "
-                             "to resume")
+            return self._resume_elastic(partitions, key, ckpt_dir,
+                                        round_hook=round_hook, every=every)
         expected = self._fingerprint(partitions)
         # the newest VALID round: a torn round-<r>.npz (writer killed
         # mid-save without the atomic rename, torn copy on a shared fs)
@@ -494,8 +517,48 @@ class AveragingRun:
                          m.backend, telemetry.get("round_syncs", 0),
                          resumed=resumed)
 
+    def _resume_elastic(self, partitions, key, ckpt_dir: str, *,
+                        round_hook: Optional[Callable],
+                        every: int) -> ElasticRunResult:
+        """Continue a checkpointed ELASTIC run — bit-identical to the
+        uninterrupted one. The checkpoint holds the full post-boundary
+        ``ElasticGroup`` + membership map; joiner PARTITIONS are not
+        serialised — they are re-derived by replaying the (caller-held)
+        ``ElasticSchedule``, which the fingerprint pins to the original
+        run's shape."""
+        expected = {**self._fingerprint(partitions), "mode": "elastic"}
+        latest = run_state.latest_ready_elastic_round(ckpt_dir)
+        if latest is None:
+            raise FileNotFoundError(
+                f"no resumable elastic checkpoint in {ckpt_dir}")
+        state = run_state.restore_elastic_round(ckpt_dir, latest)
+        run_state.check_fingerprint(state.meta, expected)
+        if state.final:
+            # finished before the kill: the group IS the result — rebuild
+            # without recomputation (same contract as the fixed-membership
+            # final-round rebuild)
+            group = state.group
+            boundary_model = CNNELMModel(*group.reduce_params())
+            members = {n: CNNELMModel(*group.members[n].params)
+                       for n in state.living}
+            records: List[ElasticRoundRecord] = []
+            if round_hook is not None:
+                records.append(ElasticRoundRecord(
+                    state.round, state.living, [], [], 0.0,
+                    round_hook(state.round, boundary_model)))
+            return ElasticRunResult(self.cfg, members, boundary_model,
+                                    group, records, 0.0, 0,
+                                    self.map_cfg.backend, resumed=True)
+        return self._run_elastic(
+            partitions, key, round_hook,
+            checkpoint=CheckpointConfig(dir=ckpt_dir, every=every),
+            restored=state, resumed=True)
+
     def _run_elastic(self, partitions: Sequence[Partition], key,
-                     round_hook: Optional[Callable]) -> ElasticRunResult:
+                     round_hook: Optional[Callable], *,
+                     checkpoint: Optional[CheckpointConfig] = None,
+                     restored: Optional["run_state.ElasticRoundState"] = None,
+                     resumed: bool = False) -> ElasticRunResult:
         """The rounds contract under membership churn: each round is one
         re-stacked executor block over the CURRENT members, and every
         boundary is an ``ElasticGroup`` event — record each member's block
@@ -520,6 +583,9 @@ class AveragingRun:
         if m.epochs % rc.rounds:
             raise ValueError(f"epochs ({m.epochs}) must split evenly into "
                              f"rounds ({rc.rounds})")
+        if checkpoint is not None and \
+                not isinstance(checkpoint, CheckpointConfig):
+            raise ValueError("checkpoint must be a CheckpointConfig")
         per_round = m.epochs // rc.rounds
         executor = make_executor(m.backend, mesh=m.mesh)
         telemetry: dict = {"dispatches": 0}
@@ -530,21 +596,46 @@ class AveragingRun:
             return (float(len(part.x)) if rc.strategy == "shard_weighted"
                     else 1.0)
 
-        group = elastic.ElasticGroup()
-        living: Dict[str, Partition] = {}
-        joined_round: Dict[str, int] = {}
-        member_id: Dict[str, int] = {}
-        beta0 = jnp.zeros((cnn.feature_dim(self.cfg), self.cfg.num_classes),
-                          jnp.float32)
-        for i, p in enumerate(partitions):
-            name = f"m{i}"
-            group.join(name, init_params=(init, beta0))
-            living[name], joined_round[name], member_id[name] = p, 0, i
-        next_id = len(partitions)
-        cur_init = init
+        # id -> partition, schedule replayed in boundary order: member ids
+        # are assigned by join order, so the replay reproduces the exact
+        # id every joiner got in the original run — this is how a RESUME
+        # recovers joiner partitions without serialising their data
+        parts_by_id: Dict[int, Partition] = dict(enumerate(partitions))
+        nid = len(partitions)
+        for b in range(rc.rounds - 1):
+            for p_new in sched.at(b)[0]:
+                parts_by_id[nid] = p_new
+                nid += 1
+        ck = checkpoint
+        ck_meta = ({**run_state.run_fingerprint(
+            m.backend, partitions, seed=m.seed, epochs=m.epochs,
+            rounds=rc.rounds, batch_size=m.batch_size), "mode": "elastic"}
+            if ck is not None else None)
+        if restored is None:
+            group = elastic.ElasticGroup()
+            living: Dict[str, Partition] = {}
+            joined_round: Dict[str, int] = {}
+            member_id: Dict[str, int] = {}
+            beta0 = jnp.zeros((cnn.feature_dim(self.cfg),
+                               self.cfg.num_classes), jnp.float32)
+            for i, p in enumerate(partitions):
+                name = f"m{i}"
+                group.join(name, init_params=(init, beta0))
+                living[name], joined_round[name], member_id[name] = p, 0, i
+            next_id = len(partitions)
+            cur_init = init
+            start_round = 0
+        else:
+            group = restored.group
+            joined_round = dict(restored.joined_round)
+            member_id = dict(restored.member_id)
+            living = {n: parts_by_id[member_id[n]] for n in restored.living}
+            next_id = restored.next_id
+            cur_init = restored.cur_init
+            start_round = restored.round + 1
         last_stats: Dict[str, elm.ELMStats] = {}
         records: List[ElasticRoundRecord] = []
-        for r in range(rc.rounds):
+        for r in range(start_round, rc.rounds):
             rt = time.perf_counter()
             names = sorted(living, key=member_id.get)      # join order
             plan = ExecutionPlan(
@@ -599,6 +690,18 @@ class AveragingRun:
                 for n in names:
                     group.record_stats(n, last_stats[n])
                 boundary_model = CNNELMModel(*group.reduce_params())
+            last = r == rc.rounds - 1
+            if ck is not None and (last or (r + 1) % ck.every == 0):
+                # post-boundary snapshot: leavers retired, sync applied,
+                # joiners admitted — exactly the state round r+1 starts
+                # from, so the continuation is bit-identical
+                path = run_state.save_elastic_round(
+                    ck.dir, r, group=group, cur_init=cur_init,
+                    joined_round=joined_round, member_id=member_id,
+                    next_id=next_id,
+                    meta={**ck_meta, "round": r, "final": last})
+                if ck.after_save is not None:
+                    ck.after_save("round", r, path)
             hooked = (round_hook(r, boundary_model)
                       if round_hook is not None else None)
             records.append(ElasticRoundRecord(
@@ -608,7 +711,8 @@ class AveragingRun:
                    for n in sorted(living, key=member_id.get)}
         return ElasticRunResult(self.cfg, members, boundary_model, group,
                                 records, time.perf_counter() - t0,
-                                telemetry["dispatches"], m.backend)
+                                telemetry["dispatches"], m.backend,
+                                resumed=resumed)
 
 
 # ---------------------------------------------------------------------------

@@ -6,10 +6,22 @@ exact layout); on this CPU container the members are simulated
 sequentially — the algorithm (disjoint partitions, zero communication
 between averaging events, weight-average reduce) is identical.
 
+Sync policies (``--sync-policy``): ``cadence`` is the fixed
+``--avg-period``/``--rounds`` contract above; ``drift`` replaces it with
+drift-TRIGGERED averaging — each member's per-step loss (computed at the
+pre-update params, i.e. prequentially) feeds a
+``repro.stream.DriftDetector`` (score = -loss) and an averaging event
+fires while ANY member is drifting. ``--drift-at N`` injects a
+distribution shift at step N (every member's token stream switches
+domains) to exercise the recovery loop; the CNN-ELM analogue, with
+sliding-window ELM stats, lives in ``repro.stream`` / docs/streaming.md.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --reduced \
       --steps 50 --members 4 --avg-period 10
   PYTHONPATH=src python -m repro.launch.train --preset lm100m --steps 200
+  PYTHONPATH=src python -m repro.launch.train --preset lm100m --steps 60 \
+      --non-iid --sync-policy drift --drift-at 30 --drift-threshold 0.5
 """
 from __future__ import annotations
 
@@ -45,12 +57,15 @@ def make_cfg(args):
     return cfg
 
 
-def make_batch_fn(cfg, args, member: int):
+def make_batch_fn(cfg, args, member: int, seed_offset: int = 0):
     """Member-partitioned data stream: disjoint domains when --non-iid
-    (the paper's not-MNIST regime), all domains otherwise."""
+    (the paper's not-MNIST regime), all domains otherwise. A non-zero
+    ``seed_offset`` re-seeds the domain mixtures — the --drift-at
+    injected distribution shift (same member/domain layout, new
+    concept)."""
     spec = TokenDatasetSpec(vocab_size=cfg.vocab_size, seq_len=args.seq,
                             batch_size=args.batch, num_domains=2 * args.members,
-                            seed=args.seed)
+                            seed=args.seed + seed_offset)
     if args.non_iid:
         domains = [2 * member, 2 * member + 1]
     else:
@@ -86,6 +101,20 @@ def main(argv=None):
     ap.add_argument("--schedule", choices=["constant", "cosine", "wsd",
                                            "dynamic"], default="cosine")
     ap.add_argument("--non-iid", action="store_true")
+    ap.add_argument("--sync-policy", choices=["cadence", "drift"],
+                    default="cadence",
+                    help="cadence = --avg-period/--rounds; drift = fire an "
+                         "averaging event while any member's DriftDetector "
+                         "(fed -loss prequentially) signals concept drift")
+    ap.add_argument("--drift-threshold", type=float, default=0.5,
+                    help="score drop below the EWMA baseline that flags "
+                         "drift (loss units under --sync-policy drift)")
+    ap.add_argument("--drift-alpha", type=float, default=0.2)
+    ap.add_argument("--drift-warmup", type=int, default=5)
+    ap.add_argument("--drift-at", type=int, default=0,
+                    help="inject a distribution shift at this step (every "
+                         "member's stream re-seeds its domain mixtures); "
+                         "0 = no injected shift")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -104,6 +133,11 @@ def main(argv=None):
         raise SystemExit("--ckpt-every needs --ckpt-dir")
     if args.resume and not args.ckpt_dir:
         raise SystemExit("--resume needs --ckpt-dir")
+    if args.resume and args.drift_at:
+        raise SystemExit("--resume does not replay an injected --drift-at "
+                         "shift's stream switch — rerun without --resume")
+    if args.drift_at < 0:
+        raise SystemExit(f"--drift-at must be >= 0, got {args.drift_at}")
 
     cfg = make_cfg(args)
     opt = {"adamw": optim.adamw, "sgd": optim.sgd,
@@ -191,9 +225,24 @@ def main(argv=None):
         avg = average_trees([m[0] for m in members])
         return [(avg, o, s) for (_, o, s) in members]
 
+    detectors = None
+    if args.sync_policy == "drift":
+        from repro.stream import DriftDetector
+        detectors = [DriftDetector(threshold=args.drift_threshold,
+                                   alpha=args.drift_alpha,
+                                   warmup=args.drift_warmup)
+                     for _ in range(args.members)]
+
     history = []
+    sync_steps = []
     t0 = time.time()
     for step in range(start_step, args.steps):
+        if args.drift_at and step == args.drift_at:
+            # the injected concept shift: every member's stream switches
+            # to re-seeded domain mixtures mid-run
+            batch_fns = [make_batch_fn(cfg, args, m, seed_offset=9973)
+                         for m in range(args.members)]
+            print(f"# drift injected at step {step}", flush=True)
         losses = []
         new_members = []
         for m, (p, o, s) in enumerate(members):
@@ -201,8 +250,16 @@ def main(argv=None):
             new_members.append((p, o, s))
             losses.append(float(metrics["loss"]))
         members = new_members
-        if avg_period and (step + 1) % avg_period == 0:
+        if detectors is not None:
+            # metrics['loss'] is evaluated at the PRE-update params on the
+            # incoming batch — the prequential score, negated so higher is
+            # better; sync while ANY member is in the drifting state
+            if any([d.update(-l) for d, l in zip(detectors, losses)]):
+                members = apply_sync(members)
+                sync_steps.append(step + 1)
+        elif avg_period and (step + 1) % avg_period == 0:
             members = apply_sync(members)
+            sync_steps.append(step + 1)
         if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             save_states(step + 1)  # post-update AND post-sync state
         history.append(losses)
@@ -210,6 +267,9 @@ def main(argv=None):
             print(f"step {step+1:5d} losses=" +
                   " ".join(f"{l:.4f}" for l in losses) +
                   f" ({time.time()-t0:.1f}s)", flush=True)
+    if args.sync_policy == "drift":
+        print(f"# drift policy fired {len(sync_steps)} syncs at steps "
+              f"{sync_steps}")
 
     averaged = average_trees([m[0] for m in members])
     # final evaluation: averaged vs members on a held-out IID stream
@@ -231,7 +291,7 @@ def main(argv=None):
         print(f"# checkpoints written to {args.ckpt_dir}")
 
     return {"eval_averaged": avg_loss, "eval_members": member_losses,
-            "history": history}
+            "history": history, "sync_steps": sync_steps}
 
 
 def replace_args(args):

@@ -1,0 +1,33 @@
+"""repro.stream — the streaming Map phase with concept-drift handling.
+
+The source paper trains each Map member on a FIXED partition; the
+authors' companion work ("Adaptive Convolutional ELM For Concept Drift
+Handling in Online Stream Data", arXiv:1610.02348) is the natural
+extension this package implements: members consume *unbounded shard
+streams* and re-synchronize when the data distribution moves.
+
+* ``sources``  — ``StreamSource`` protocol + glob-pattern file streams,
+  in-memory array streams and the synthetic drift generator; per-member
+  shard streams follow THE ``seed + i`` rng rule.
+* ``window``   — ``SlidingWindowStats``: a bounded deque of per-chunk
+  ``ELMStats`` deltas whose running total is rank-updated on push and
+  rank-DOWNdated on evict (``elm.downdate_stats``), with an equivalence
+  gate against recompute-from-scratch.
+* ``drift``    — ``DriftDetector``: per-member held-out score tracked
+  per chunk against an EWMA baseline; a drop beyond the threshold is the
+  drift signal.
+* ``run``      — ``StreamingRun``: the chunk loop (prequential
+  score → train block through the executor → window update → windowed β)
+  plus the sync policies ``ReduceConfig(sync="rounds"|"drift")`` and
+  per-sync checkpointing for ``repro.serve`` hot-reload.
+
+See docs/streaming.md for the window/downdate contract, the drift
+signal and the sync-policy semantics.
+"""
+from repro.stream.drift import DriftDetector  # noqa: F401
+from repro.stream.run import (StreamConfig, StreamingRun,  # noqa: F401
+                              StreamRecord, StreamResult, SyncEvent)
+from repro.stream.sources import (ArraySource, FileSource,  # noqa: F401
+                                  StreamSource, SyntheticDriftSource,
+                                  member_streams, write_shard_files)
+from repro.stream.window import SlidingWindowStats  # noqa: F401

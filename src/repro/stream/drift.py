@@ -1,0 +1,77 @@
+"""Drift detection — the per-member signal that triggers a Reduce.
+
+Each member scores the held-out slice of every incoming chunk BEFORE
+training on it (prequential / test-then-train evaluation, the standard
+stream-learning protocol: the score is always an out-of-sample estimate
+because the model has never seen the chunk). ``DriftDetector`` tracks
+that score against an EWMA baseline; a drop beyond ``threshold`` flags
+drift.
+
+Drifting is a LEVEL, not an edge: the detector stays in the drifting
+state — and the ``sync="drift"`` policy keeps firing Reduces — until the
+score recovers to within ``threshold`` of the frozen baseline. That is
+deliberate: right after a concept shift the sliding window still holds
+pre-drift chunks, so the first few re-solved β's are contaminated;
+repeated syncs while drifting keep publishing fresher averages as the
+window flushes, and the detector disarms on its own once the windowed
+model scores well again. The baseline is FROZEN during drift (updating
+it would chase the degraded scores and disarm the detector on a still-
+broken model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass
+class DriftDetector:
+    """EWMA score tracker with a drop threshold.
+
+    ``update(score)`` feeds one prequential score (higher is better —
+    accuracy, or -loss) and returns whether the member is currently
+    drifting. The first ``warmup`` scores only seed the baseline and can
+    never signal (a cold model's noisy early scores are not drift)."""
+
+    threshold: float = 0.2    # baseline − score that flags drift
+    alpha: float = 0.2        # EWMA weight of the newest score
+    warmup: int = 3           # scores consumed before arming
+
+    baseline: float = field(default=float("nan"), init=False)
+    drifting: bool = field(default=False, init=False)
+    seen: int = field(default=0, init=False)
+    history: List[float] = field(default_factory=list, init=False)
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
+        if self.threshold <= 0.0:
+            raise ValueError(f"threshold must be > 0, got {self.threshold}")
+        if self.warmup < 1:
+            raise ValueError(f"warmup must be >= 1, got {self.warmup}")
+
+    def update(self, score: float) -> bool:
+        """Feed one held-out score; returns the (level) drift state."""
+        score = float(score)
+        self.seen += 1
+        self.history.append(score)
+        if self.seen <= self.warmup:
+            # Seed phase: plain running mean, detector disarmed.
+            if self.seen == 1:
+                self.baseline = score
+            else:
+                self.baseline += (score - self.baseline) / self.seen
+            return False
+        if self.drifting:
+            # Baseline frozen; disarm only on recovery.
+            if self.baseline - score <= self.threshold:
+                self.drifting = False
+                # Recovery re-seeds the baseline at the recovered level —
+                # post-drift "normal" may be a different score regime.
+                self.baseline = score
+            return self.drifting
+        if self.baseline - score > self.threshold:
+            self.drifting = True
+            return True
+        self.baseline += self.alpha * (score - self.baseline)
+        return False

@@ -1,0 +1,365 @@
+"""The streaming Map phase — chunk loop, sync policies, checkpoint publish.
+
+``StreamingRun`` is the unbounded-stream sibling of
+``runner.AveragingRun``: k members consume per-member shard streams
+(``sources.member_streams``) instead of fixed partitions, and the Reduce
+fires on a POLICY (``ReduceConfig.sync``) instead of a round count.
+
+Per chunk ``t`` each member:
+
+1. **scores** the chunk's held-out slice with its CURRENT model
+   (prequential / test-then-train: the score is out-of-sample by
+   construction) and feeds it to its ``DriftDetector``;
+2. **trains** one executor block on the chunk — the SAME
+   ``repro.core.executor`` engine the batch runner uses (sequential or
+   stacked backend, the PR-2 chunked double-buffered pipeline, one jit
+   compile for the whole stream because every chunk shares one shape),
+   resumed from the member's own params via ``ExecutionPlan.member_init``
+   and its one rng stream via ``member_seeds``/``start_epochs``;
+3. **pushes** the block's ``ELMStats`` into its ``SlidingWindowStats``
+   (the evicted chunk is DOWNdated out) and re-solves the windowed β —
+   one batched Cholesky for all members;
+4. under the sync policy, the members' models are (weighted-)averaged —
+   the paper's one-all-reduce Reduce — members reset to the average, and
+   the sync is CHECKPOINTED as ``run_state`` round ``t`` so a live
+   ``repro.serve`` endpoint hot-reloads it. Round numbers are chunk
+   indices: drift-triggered syncs land at IRREGULAR rounds, which
+   ``CheckpointWatcher``/``latest_ready_round`` handle by construction
+   (they only ever ask for the newest ready round).
+
+Sync policies (``ReduceConfig.sync``):
+
+* ``"rounds"`` — fixed cadence: every ``StreamConfig.sync_every`` chunks
+  (0 = never after the initial publish), the streaming analogue of the
+  batch runner's rounds contract;
+* ``"drift"``  — fire while ANY member's detector is in the drifting
+  state. Drifting is a level, so a concept shift produces a CLUSTER of
+  syncs: the window still holds pre-drift chunks right after the shift,
+  and each following sync publishes a fresher average as they flush,
+  until the windowed model scores well again and the detector disarms.
+
+With ``epochs=0`` (the closed-form regime) the backbone is frozen and
+the windowed β is the member's entire learning state — windowed ELM
+training is then EXACT for the data in the window. With SGD epochs the
+β window is the standard online approximation (each chunk's stats were
+computed under the params of their time).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint import run_state
+from repro.core import elm
+from repro.core.cnn_elm import (CNNELMModel, StackedMembers, _bump,
+                                average_models, stack_models)
+from repro.core.executor import CheckpointConfig, ExecutionPlan, make_executor
+from repro.core.runner import MapConfig, ReduceConfig
+from repro.data.partition import Partition
+from repro.kernels import resolve_use_pallas
+from repro.models import cnn
+from repro.stream.drift import DriftDetector
+from repro.stream.window import SlidingWindowStats
+
+STREAM_BACKENDS = ("sequential", "stacked")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _holdout_scores(cfg, cnn_params_k, beta_k, x_k, *, use_pallas):
+    """Member i's ELM scores on member i's OWN held-out slice — one vmap
+    dispatch for all k (the per-member twin of the ensemble's
+    ``_scores_stacked``, which scores one x under every member)."""
+    def one(p, b, x):
+        h = cnn.features(cfg, p, x, use_pallas=use_pallas)
+        return elm.predict(h, b)
+
+    return jax.vmap(one)(cnn_params_k, beta_k, x_k)
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Streaming-phase knobs (the Map/Reduce knobs stay on
+    ``MapConfig``/``ReduceConfig``).
+
+    ``window_chunks`` — sliding-window capacity in chunks per member.
+    ``holdout_rows`` — leading rows of each chunk scored prequentially
+    (they ARE still trained on afterwards — test-then-train).
+    ``sync_every`` — the ``sync="rounds"`` cadence in chunks (0 = only
+    the initial publish). ``initial_publish`` — publish chunk 0's average
+    so a serving endpoint has a model under EVERY policy (including
+    never-sync baselines). ``drift_*`` — per-member ``DriftDetector``
+    parameters. ``verify_every`` — run each window's equivalence gate
+    (``SlidingWindowStats.verify``) every N chunks (0 = off);
+    ``max_chunks`` stops an infinite stream."""
+    window_chunks: int = 8
+    holdout_rows: int = 32
+    sync_every: int = 0
+    initial_publish: bool = True
+    drift_threshold: float = 0.2
+    drift_alpha: float = 0.2
+    drift_warmup: int = 3
+    verify_every: int = 0
+    verify_rtol: float = 1e-5
+    verify_atol: float = 1e-3
+    max_chunks: Optional[int] = None
+
+    def __post_init__(self):
+        if self.window_chunks < 1:
+            raise ValueError(f"window_chunks must be >= 1, "
+                             f"got {self.window_chunks}")
+        if self.holdout_rows < 1:
+            raise ValueError(f"holdout_rows must be >= 1, "
+                             f"got {self.holdout_rows}")
+        if self.sync_every < 0 or self.verify_every < 0:
+            raise ValueError("sync_every/verify_every must be >= 0")
+
+
+@dataclass
+class StreamRecord:
+    """One chunk's telemetry: the prequential scores fed to the
+    detectors, who was drifting AFTER the update, whether this chunk
+    synced and why, and the window gate's error when it ran."""
+    chunk: int
+    scores: List[float]
+    drifting: List[bool]
+    synced: bool
+    reason: Optional[str] = None          # "initial" | "cadence" | "drift"
+    window_err: Optional[float] = None
+
+
+@dataclass
+class SyncEvent:
+    """One fired Reduce: the chunk (= checkpoint round) it landed on,
+    why it fired, which members were drifting, the published averaged
+    model and the durable checkpoint path (None without checkpointing)."""
+    chunk: int
+    reason: str
+    drifting: List[int]
+    averaged: CNNELMModel
+    path: Optional[str] = None
+
+
+@dataclass
+class StreamResult:
+    """What a streaming run produced. ``members``/``stacked`` are the
+    final per-member models (block params + windowed β); ``averaged`` is
+    a fresh Reduce over them at stream end; ``last_published`` is what a
+    serving endpoint tracking the checkpoint dir is left running —
+    under ``sync_every=0`` baselines the two differ by design."""
+    cfg: Any
+    members: List[CNNELMModel]
+    stacked: StackedMembers
+    averaged: CNNELMModel
+    last_published: Optional[CNNELMModel]
+    records: List[StreamRecord]
+    syncs: List[SyncEvent]
+    windows: List[SlidingWindowStats]
+    detectors: List[DriftDetector]
+    chunks: int
+    wall_time_s: float
+    dispatches: int
+    backend: str
+
+    @property
+    def sync_chunks(self) -> List[int]:
+        return [s.chunk for s in self.syncs]
+
+
+@dataclass
+class StreamingRun:
+    """One streaming distributed-averaging experiment: model config +
+    Map config + Reduce config (its ``sync`` policy) + stream config.
+    ``run(streams, key)`` drives the chunk loop over k per-member
+    ``Partition`` iterables (``sources.member_streams``)."""
+    cfg: Any
+    map_cfg: MapConfig = field(default_factory=MapConfig)
+    reduce_cfg: ReduceConfig = field(default_factory=ReduceConfig)
+    stream_cfg: StreamConfig = field(default_factory=StreamConfig)
+
+    def __post_init__(self):
+        m, rc = self.map_cfg, self.reduce_cfg
+        if m.backend not in STREAM_BACKENDS:
+            raise ValueError(
+                f"streaming runs on backend {STREAM_BACKENDS} (re-stacked "
+                f"per chunk block), got {m.backend!r}")
+        if rc.rounds != 1:
+            raise ValueError(
+                "ReduceConfig.rounds is the BATCH runner's cadence; a "
+                "streaming run syncs per chunk under ReduceConfig.sync "
+                "('rounds' cadence = StreamConfig.sync_every) — leave "
+                "rounds=1")
+        if rc.elastic is not None:
+            raise ValueError("elastic membership under streaming is not "
+                             "supported — run fixed members")
+
+    def run(self, streams: Sequence, key, *,
+            checkpoint: Optional[CheckpointConfig] = None,
+            sync_hook: Optional[Callable[[SyncEvent], Any]] = None
+            ) -> StreamResult:
+        """Consume the k member streams until exhaustion (or
+        ``StreamConfig.max_chunks``). ``checkpoint`` publishes every sync
+        as ``run_state`` round ``t`` (t = chunk index — IRREGULAR round
+        numbers under the drift policy); ``sync_hook(event)`` fires after
+        each published sync."""
+        m, rc, sc = self.map_cfg, self.reduce_cfg, self.stream_cfg
+        k = len(streams)
+        if k < 1:
+            raise ValueError("need at least one member stream")
+        if checkpoint is not None and \
+                not isinstance(checkpoint, CheckpointConfig):
+            raise ValueError("checkpoint must be a CheckpointConfig")
+        executor = make_executor(m.backend, mesh=m.mesh)
+        F, C = cnn.feature_dim(self.cfg), self.cfg.num_classes
+        use_pallas = resolve_use_pallas(m.use_pallas)
+        telemetry: Dict[str, int] = {"dispatches": 0}
+        init = cnn.init_params(self.cfg, key)
+        windows = [SlidingWindowStats(sc.window_chunks, F, C)
+                   for _ in range(k)]
+        detectors = [DriftDetector(threshold=sc.drift_threshold,
+                                   alpha=sc.drift_alpha,
+                                   warmup=sc.drift_warmup)
+                     for _ in range(k)]
+        # every chunk block draws this many permutations per member stream
+        # (one per epoch; the closed-form pass draws exactly one) — the
+        # cursor that keeps member i on ONE rng stream across blocks
+        draws_per_block = max(m.epochs, 1)
+        member_params = [init] * k
+        beta_k = np.zeros((k, F, C), np.float32)    # pre-chunk-0 readout
+        models: List[CNNELMModel] = [CNNELMModel(init, beta_k[i])
+                                     for i in range(k)]
+        ck_meta = {"backend": m.backend, "seed": m.seed, "epochs": m.epochs,
+                   "rounds": 1, "batch_size": m.batch_size, "k": k,
+                   "mode": "stream", "sync": rc.sync}
+        records: List[StreamRecord] = []
+        syncs: List[SyncEvent] = []
+        last_published: Optional[CNNELMModel] = None
+        its = [iter(s) for s in streams]
+        t0 = time.perf_counter()
+        t = 0
+        while sc.max_chunks is None or t < sc.max_chunks:
+            parts: List[Partition] = []
+            for it in its:
+                p = next(it, None)
+                if p is None:
+                    break
+                parts.append(p)
+            if len(parts) < k:
+                break                     # a stream ran dry: stop the run
+            # 1) prequential score of each member's held-out slice under
+            #    its CURRENT model (pre-training — out-of-sample)
+            hold = min(sc.holdout_rows, min(len(p.x) for p in parts))
+            x_k = np.stack([np.asarray(p.x[:hold]) for p in parts])
+            scores_k = np.asarray(_holdout_scores(
+                self.cfg,
+                jax.tree.map(lambda *xs: np.stack(xs),
+                             *[mm.cnn_params for mm in models]),
+                np.stack([np.asarray(mm.beta) for mm in models]),
+                x_k, use_pallas=use_pallas))
+            _bump(telemetry)
+            scores = [float(np.mean(scores_k[i].argmax(-1) ==
+                                    np.asarray(parts[i].y[:hold])))
+                      for i in range(k)]
+            for d, s in zip(detectors, scores):
+                d.update(s)
+            # 2) one executor block over the chunk, resumed from each
+            #    member's own params and rng cursor
+            plan = ExecutionPlan(
+                epochs=m.epochs,
+                lr_schedule=(None if m.epochs == 0 else
+                             (lambda e, off=t * m.epochs:
+                              m.lr_schedule(off + e))),
+                batch_size=m.batch_size, seed=m.seed,
+                use_pallas=m.use_pallas, chunk_batches=m.chunk_batches,
+                rounds=1, telemetry=telemetry,
+                member_seeds=[m.seed + i for i in range(k)],
+                start_epochs=[t * draws_per_block] * k,
+                member_init=member_params if t > 0 else None)
+            outcome = executor.execute(self.cfg, init, parts, plan)
+            member_params = [mm.cnn_params for mm in outcome.members]
+            # 3) window push (+ downdate on evict) and ONE batched
+            #    windowed-β solve over every member's window total
+            for i, w in enumerate(windows):
+                w.push(elm.ELMStats(outcome.stats.u[i], outcome.stats.v[i],
+                                    outcome.stats.n[i]))
+            win_err = None
+            if sc.verify_every and (t + 1) % sc.verify_every == 0:
+                win_err = max(w.verify(rtol=sc.verify_rtol,
+                                       atol=sc.verify_atol)
+                              for w in windows)
+            totals = run_state.stack_stats([w.total() for w in windows])
+            beta_k = np.asarray(elm.solve_beta(totals,
+                                               self.cfg.elm_lambda))
+            _bump(telemetry)
+            models = [CNNELMModel(member_params[i], beta_k[i])
+                      for i in range(k)]
+            # 4) the sync policy
+            drifting = [d.drifting for d in detectors]
+            if t == 0 and sc.initial_publish:
+                reason = "initial"
+            elif rc.sync == "drift" and any(drifting):
+                reason = "drift"
+            elif rc.sync == "rounds" and sc.sync_every and \
+                    (t + 1) % sc.sync_every == 0:
+                reason = "cadence"
+            else:
+                reason = None
+            if reason is not None:
+                weights = self._weights(windows)
+                averaged = average_models(models, weights=weights)
+                _bump(telemetry)
+                # members reset to the averaged backbone (the parallel-SGD
+                # sync; a frozen epochs=0 backbone makes this the identity)
+                # — the windowed stats stay member-local: they are each
+                # member's shard memory, and the next chunk's β re-solves
+                # from them
+                member_params = [averaged.cnn_params] * k
+                path = None
+                if checkpoint is not None:
+                    path = run_state.save_round(
+                        checkpoint.dir, t, members=stack_models(models),
+                        stats=totals, averaged=averaged,
+                        meta={**ck_meta, "round": t, "reason": reason,
+                              "final": False})
+                    if checkpoint.after_save is not None:
+                        checkpoint.after_save("round", t, path)
+                event = SyncEvent(
+                    chunk=t, reason=reason,
+                    drifting=[i for i, d in enumerate(drifting) if d],
+                    averaged=averaged, path=path)
+                syncs.append(event)
+                last_published = averaged
+                if sync_hook is not None:
+                    sync_hook(event)
+            records.append(StreamRecord(t, scores, drifting,
+                                        reason is not None, reason, win_err))
+            t += 1
+        if t == 0:
+            raise ValueError("the member streams yielded no chunks")
+        averaged = average_models(models, weights=self._weights(windows))
+        return StreamResult(
+            cfg=self.cfg, members=models, stacked=stack_models(models),
+            averaged=averaged, last_published=last_published,
+            records=records, syncs=syncs, windows=windows,
+            detectors=detectors, chunks=t,
+            wall_time_s=time.perf_counter() - t0,
+            dispatches=telemetry["dispatches"], backend=m.backend)
+
+    def _weights(self, windows) -> Optional[List[float]]:
+        """Reduce weights under streaming: ``shard_weighted`` weighs by
+        the rows currently IN each member's window (the streaming twin of
+        shard row counts); explicit sequences pass through."""
+        strat = self.reduce_cfg.strategy
+        if isinstance(strat, str):
+            if strat == "uniform":
+                return None
+            return [float(w.total().n) for w in windows]
+        w = [float(v) for v in strat]
+        if len(w) != len(windows):
+            raise ValueError(f"{len(w)} explicit weights for "
+                             f"{len(windows)} members")
+        return w

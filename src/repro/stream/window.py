@@ -1,0 +1,135 @@
+"""Sliding-window ELM sufficient statistics — bounded-memory forgetting.
+
+ELM's (U, V, n) are plain sums over rows of H, which makes them exactly
+rank-UPdatable (add a chunk's stats) **and** rank-DOWNdatable (subtract
+an evicted chunk's stats — ``elm.downdate_stats``). A sliding window over
+an unbounded stream therefore costs one add and at most one subtract per
+chunk, O(window) host memory, and never replays data.
+
+The catch is floating point: ``(a + b) - b`` is not bit-equal to ``a``
+in f32, so a long-running window's downdated total can drift from the
+sum a fresh accumulation over the retained chunks would produce. The
+drift is bounded (each evict contributes O(eps·|chunk stats|)) but NOT
+zero, so the window carries its own **equivalence gate**:
+``recompute()`` re-sums the retained deque entries from scratch and
+``verify()`` asserts the running total matches within f32 tolerance —
+the streaming run (``StreamConfig.verify_every``) and the benchmark run
+it periodically, and ``tests/test_stream.py`` pins the property.
+
+Accumulation is ALWAYS f32 on the host (numpy), matching the f32-accum
+contract of the elm_stats kernel — chunks whose features were computed
+in bf16 still carry f32 stats, so the window never downgrades the
+accumulator dtype.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Optional
+
+import numpy as np
+
+from repro.core import elm
+
+
+def _host_stats(stats: elm.ELMStats) -> elm.ELMStats:
+    """Device/duck-typed stats -> host f32 numpy (the window's dtype
+    contract: the accumulator never drops below f32)."""
+    return elm.ELMStats(np.asarray(stats.u, np.float32),
+                        np.asarray(stats.v, np.float32),
+                        np.asarray(stats.n, np.float32))
+
+
+class WindowDriftError(AssertionError):
+    """The equivalence gate tripped: the downdated running total no
+    longer matches a fresh recompute over the retained chunks."""
+
+
+class SlidingWindowStats:
+    """A bounded deque of per-chunk ``ELMStats`` deltas + their running
+    total, downdated on eviction.
+
+    ``push(stats)`` appends a chunk's stats and adds them to the total;
+    once more than ``capacity`` chunks are held, the oldest is popped and
+    its stats SUBTRACTED (the downdate) — the evicted stats are returned
+    so callers can account for them. ``total()`` is the windowed (U, V, n)
+    to solve β from; ``recompute()``/``verify()`` are the equivalence
+    gate against from-scratch accumulation."""
+
+    def __init__(self, capacity: int, num_features: int, num_classes: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._chunks: Deque[elm.ELMStats] = deque()
+        self._total = _host_stats(elm.zero_stats(num_features, num_classes))
+        self.pushed = 0          # lifetime chunks seen
+        self.evicted = 0         # lifetime chunks downdated out
+
+    def __len__(self) -> int:
+        return len(self._chunks)
+
+    @property
+    def full(self) -> bool:
+        return len(self._chunks) == self.capacity
+
+    def push(self, stats: elm.ELMStats) -> Optional[elm.ELMStats]:
+        """Add one chunk's stats; returns the evicted chunk's stats when
+        the window slides (None while still filling)."""
+        stats = _host_stats(stats)
+        self._chunks.append(stats)
+        self._total = elm.add_stats(self._total, stats)
+        self.pushed += 1
+        if len(self._chunks) <= self.capacity:
+            return None
+        old = self._chunks.popleft()
+        self._total = elm.downdate_stats(self._total, old)
+        self.evicted += 1
+        return old
+
+    def total(self) -> elm.ELMStats:
+        """The windowed sufficient statistics (running, downdated)."""
+        return self._total
+
+    def recompute(self) -> elm.ELMStats:
+        """From-scratch sum over the retained chunks — what the running
+        total SHOULD be, modulo f32 rounding of the downdates."""
+        fresh = elm.ELMStats(np.zeros_like(self._total.u),
+                             np.zeros_like(self._total.v),
+                             np.zeros_like(self._total.n))
+        for s in self._chunks:
+            fresh = elm.add_stats(fresh, s)
+        return fresh
+
+    def max_abs_error(self) -> float:
+        """max |running − recompute| over U, V and n."""
+        fresh = self.recompute()
+        return max(float(np.max(np.abs(self._total.u - fresh.u), initial=0)),
+                   float(np.max(np.abs(self._total.v - fresh.v), initial=0)),
+                   float(np.abs(self._total.n - fresh.n)))
+
+    def verify(self, *, rtol: float = 1e-5, atol: float = 1e-3):
+        """THE equivalence gate: raise ``WindowDriftError`` unless the
+        downdated running total matches ``recompute()`` within f32
+        tolerance (scaled to the stats' magnitude via ``rtol``). Returns
+        the max absolute error so callers can log/persist it."""
+        fresh = self.recompute()
+        for name, run, ref in (("u", self._total.u, fresh.u),
+                               ("v", self._total.v, fresh.v),
+                               ("n", self._total.n, fresh.n)):
+            err = np.max(np.abs(run - ref), initial=0.0)
+            bound = atol + rtol * np.max(np.abs(ref), initial=0.0)
+            if err > bound:
+                raise WindowDriftError(
+                    f"window stats drifted on {name!r}: downdated running "
+                    f"total differs from recompute-from-scratch by {err:g} "
+                    f"(bound {bound:g}) after {self.evicted} evictions — "
+                    f"the downdate path is corrupting the accumulator")
+        return self.max_abs_error()
+
+    def reset_from_recompute(self) -> float:
+        """Re-anchor the running total to ``recompute()`` (drop any
+        accumulated rounding drift); returns the error that was dropped.
+        Long-running streams can call this at verify points so drift
+        never compounds past the gate's tolerance."""
+        err = self.max_abs_error()
+        self._total = self.recompute()
+        return err

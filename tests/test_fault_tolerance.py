@@ -363,11 +363,126 @@ def test_elastic_validation(parts):
                          (ElasticEvent(after_round=0,
                                        leave=("m0", "m1", "m2")),)))
                      ).run(parts, KEY)
-    with pytest.raises(ValueError, match="not supported"):
+    with pytest.raises(ValueError, match="CheckpointConfig"):
         AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
                                     batch_size=16),
                      ReduceConfig(rounds=2, elastic=sched)).run(
-            parts, KEY, checkpoint=CheckpointConfig(dir="/tmp/x"))
+            parts, KEY, checkpoint="/tmp/x")
+
+
+# ---------------------------------------------------------------------------
+# Elastic checkpoint/resume (ISSUE-8 satellite: churn state in run_state)
+# ---------------------------------------------------------------------------
+
+def _elastic_run(sched, backend="stacked", rounds=3):
+    return AveragingRun(
+        CFG, MapConfig(epochs=rounds, lr_schedule=LR, batch_size=16,
+                       backend=backend),
+        ReduceConfig(rounds=rounds, elastic=sched))
+
+
+def _churn_sched(parts):
+    # join at round 0's boundary, a leave at round 1's: the resume point
+    # (after round 1) carries a retired contribution AND a joiner whose
+    # partition only exists inside the schedule
+    return ElasticSchedule((
+        ElasticEvent(after_round=0, join=(parts[0],)),
+        ElasticEvent(after_round=1, leave=("m1",))))
+
+
+def _elastic_results_bit_equal(ref, res):
+    assert sorted(ref.members) == sorted(res.members)
+    for n in ref.members:
+        _models_bit_equal(ref.members[n], res.members[n])
+    _models_bit_equal(ref.averaged, res.averaged)
+
+
+@pytest.mark.parametrize("backend", ["stacked", "sequential"])
+def test_elastic_resume_bit_identical(tmp_path, parts, backend):
+    """Killed right after elastic round 1's checkpoint — with a joiner
+    already admitted and a leaver already retired — the resumed run's
+    members, averaged model AND retired contributions equal the
+    uninterrupted run bit-for-bit. The eround schema must therefore carry
+    the full churn state: member ids (rng streams), joined rounds
+    (stream fast-forwards), retired weighted params and the boundary
+    average."""
+    sched = _churn_sched(parts)
+    ref = _elastic_run(sched, backend).run(parts, KEY)
+    crashed, res = faults.run_crash_resume(
+        _elastic_run(sched, backend), parts, KEY, str(tmp_path),
+        unit="round", index=1)
+    assert crashed and res.resumed
+    _elastic_results_bit_equal(ref, res)
+    (rp, rw), = res.group.retired_params
+    (ep, ew), = ref.group.retired_params
+    assert rw == ew
+    _models_bit_equal(CNNELMModel(*rp), CNNELMModel(*ep))
+    # only round 2 re-executed
+    assert [r.round for r in res.rounds] == [2]
+
+
+def test_elastic_resume_from_final_rebuilds(tmp_path, parts):
+    """A finished elastic run resumes with zero recomputation from its
+    final eround checkpoint (living members in join order, so the
+    order-sensitive reduce reproduces bit-identically)."""
+    sched = _churn_sched(parts)
+    ref = _elastic_run(sched).run(
+        parts, KEY, checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    res = _elastic_run(sched).resume(parts, KEY, str(tmp_path))
+    assert res.resumed and res.dispatches == 0 and res.rounds == []
+    _elastic_results_bit_equal(ref, res)
+
+
+def test_elastic_round_state_roundtrip(tmp_path, parts):
+    """The eround schema round-trips the ElasticGroup exactly: params and
+    stats bit-equal, retired entries in append order with their weights,
+    membership maps intact — and the files never collide with plain
+    round-<r> checkpoints in the same directory."""
+    sched = _churn_sched(parts)
+    _elastic_run(sched).run(parts, KEY,
+                            checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    assert list_steps(str(tmp_path), run_state.ELASTIC) == [0, 1, 2]
+    assert list_steps(str(tmp_path), run_state.ROUND) == []
+    state = run_state.restore_elastic_round(str(tmp_path))
+    assert state.final and state.round == 2
+    assert state.living == ["m0", "m2", "m3"]        # join order, m1 gone
+    assert state.member_id == {"m0": 0, "m2": 2, "m3": 3}
+    assert state.joined_round == {"m0": 0, "m2": 0, "m3": 1}
+    assert state.next_id == 4
+    assert state.meta["mode"] == "elastic"
+    assert len(state.group.retired_params) == 1
+    assert isinstance(state.group.retired_params, list)
+    mid = run_state.restore_elastic_round(str(tmp_path), 0)
+    assert not mid.final and mid.group.retired_params == []
+
+
+def test_elastic_resume_rejects_mismatched_run(tmp_path, parts):
+    """The elastic fingerprint (mode included) refuses a resume under a
+    different config, and a PLAIN run refuses an elastic directory."""
+    sched = _churn_sched(parts)
+    faults.run_to_crash(_elastic_run(sched), parts, KEY, str(tmp_path),
+                        unit="round", index=1)
+    with pytest.raises(ValueError, match="seed"):
+        AveragingRun(
+            CFG, MapConfig(epochs=2, lr_schedule=LR, batch_size=16, seed=7),
+            ReduceConfig(rounds=3, elastic=sched)).resume(
+            parts, KEY, str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        _stacked_run().resume(parts, KEY, str(tmp_path))
+
+
+def test_elastic_checkpoint_every_cadence(tmp_path, parts):
+    """every=2 saves round 1 and the final round only; the torn-file
+    probe (latest_ready_elastic_round) skips a corrupted newest file."""
+    sched = _churn_sched(parts)
+    _elastic_run(sched).run(
+        parts, KEY,
+        checkpoint=CheckpointConfig(dir=str(tmp_path), every=2))
+    assert list_steps(str(tmp_path), run_state.ELASTIC) == [1, 2]
+    assert run_state.latest_ready_elastic_round(str(tmp_path)) == 2
+    faults.inject_torn_save(str(tmp_path), run_state.ELASTIC, 3,
+                            crash=False)
+    assert run_state.latest_ready_elastic_round(str(tmp_path)) == 2
 
 
 # ---------------------------------------------------------------------------

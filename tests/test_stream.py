@@ -1,0 +1,458 @@
+"""The streaming Map phase (``repro.stream``): downdate properties of
+the ELM sufficient statistics (add-then-downdate vs never-added, masked
+and bf16-feature paths), the sliding window's evict-equals-recompute
+equivalence gate, the drift detector's level semantics, the stream
+sources (THE ``seed + i`` rng rule, glob-pattern file streams with
+carry-over chunking, the synthetic drift harness), the chunk loop end to
+end under every sync policy, and the ISSUE-8 regression that drift-
+triggered checkpoints at IRREGULAR round numbers hot-reload through
+``CheckpointWatcher``."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import run_state
+from repro.checkpoint.ckpt import list_steps
+from repro.configs.base import get_reduced_config
+from repro.core import elm, faults
+from repro.core.executor import (CheckpointConfig, ExecutionPlan,
+                                 make_executor)
+from repro.core.runner import AveragingRun, MapConfig, ReduceConfig
+from repro.data.partition import partition_iid
+from repro.data.synthetic import make_extended_mnist
+from repro.models import cnn
+from repro.serve import (BucketedScorer, CheckpointWatcher, EnsembleServer,
+                         ServeConfig)
+from repro.stream import (ArraySource, DriftDetector, FileSource,
+                          SlidingWindowStats, StreamConfig, StreamingRun,
+                          SyntheticDriftSource, member_streams,
+                          write_shard_files)
+from repro.stream.window import WindowDriftError
+
+CFG = get_reduced_config("cnn_elm_6c12c")
+KEY = jax.random.PRNGKey(0)
+F_DIM, C_DIM = 6, 4          # tiny stats shapes for the property tests
+
+
+def _rand_stats(rng, n, *, bf16=False, mask=None):
+    h = rng.standard_normal((n, F_DIM)).astype(np.float32)
+    t = np.eye(C_DIM, dtype=np.float32)[rng.integers(0, C_DIM, size=n)]
+    if bf16:
+        h = jnp.asarray(h, jnp.bfloat16)
+    return elm.batch_stats(h, t, mask=mask)
+
+
+def _stats_close(a, b, *, rtol=1e-5, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a.u), np.asarray(b.u),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.v), np.asarray(b.v),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.n), np.asarray(b.n),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Downdate properties (ISSUE-8 satellite: add-then-downdate vs never-added)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 48), m=st.integers(4, 48))
+def test_downdate_matches_never_added(n, m):
+    """(a + b) − b ≈ a within f32 tolerance for real batch stats — the
+    algebraic identity the sliding window's evictions rely on."""
+    rng = np.random.default_rng(1000 * n + m)
+    a, b = _rand_stats(rng, n), _rand_stats(rng, m)
+    _stats_close(elm.downdate_stats(elm.add_stats(a, b), b), a)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 32), m=st.integers(4, 32))
+def test_downdate_matches_never_added_masked(n, m):
+    """The same identity when the downdated chunk carried a row mask (the
+    padded stacked Map path): masked rows never existed, so downdating
+    the masked stats removes exactly the surviving rows — including from
+    the row count n."""
+    rng = np.random.default_rng(2000 * n + m)
+    a = _rand_stats(rng, n)
+    mask = (rng.random(m) > 0.5).astype(np.float32)
+    b = _rand_stats(rng, m, mask=mask)
+    assert float(b.n) == float(mask.sum())
+    got = elm.downdate_stats(elm.add_stats(a, b), b)
+    _stats_close(got, a)
+
+
+def test_downdate_bf16_features_f32_accum():
+    """bf16 features still produce f32 stats (the accumulator dtype
+    contract), so window adds/downdates never run in bf16."""
+    rng = np.random.default_rng(3)
+    a = _rand_stats(rng, 16, bf16=True)
+    b = _rand_stats(rng, 8, bf16=True)
+    assert a.u.dtype == a.v.dtype == a.n.dtype == jnp.float32
+    _stats_close(elm.downdate_stats(elm.add_stats(a, b), b), a,
+                 rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(total=st.integers(2, 24), cap=st.integers(1, 8))
+def test_window_evict_matches_recompute(total, cap):
+    """Push `total` random chunks through a capacity-`cap` window: the
+    downdated running total matches a from-scratch sum over the retained
+    chunks within the gate's tolerance, and the deque holds exactly the
+    newest min(total, cap) chunks."""
+    rng = np.random.default_rng(4000 + 31 * total + cap)
+    w = SlidingWindowStats(cap, F_DIM, C_DIM)
+    chunks = [_rand_stats(rng, int(rng.integers(4, 24)))
+              for _ in range(total)]
+    evicted = [w.push(s) for s in chunks]
+    assert len(w) == min(total, cap)
+    assert w.pushed == total and w.evicted == max(0, total - cap)
+    assert [e is not None for e in evicted] == \
+        [i >= cap for i in range(total)]
+    # retained = the newest cap chunks, summed fresh in deque order
+    fresh = elm.ELMStats(np.zeros((F_DIM, F_DIM), np.float32),
+                         np.zeros((F_DIM, C_DIM), np.float32),
+                         np.zeros((), np.float32))
+    for s in chunks[-cap:]:
+        fresh = elm.add_stats(fresh, elm.ELMStats(
+            np.asarray(s.u, np.float32), np.asarray(s.v, np.float32),
+            np.asarray(s.n, np.float32)))
+    _stats_close(w.recompute(), fresh, rtol=0, atol=0)   # bit-equal
+    assert w.verify() <= 1e-3 + 1e-5 * float(np.max(np.abs(fresh.u)))
+
+
+def test_window_gate_trips_on_corruption():
+    """A corrupted running total is exactly what the equivalence gate
+    exists to catch; reset_from_recompute re-anchors it."""
+    rng = np.random.default_rng(5)
+    w = SlidingWindowStats(2, F_DIM, C_DIM)
+    for _ in range(4):
+        w.push(_rand_stats(rng, 16))
+    w.verify()
+    w._total = elm.ELMStats(w._total.u + 1.0, w._total.v, w._total.n)
+    with pytest.raises(WindowDriftError, match="'u'"):
+        w.verify()
+    assert w.reset_from_recompute() >= 1.0
+    w.verify()
+    with pytest.raises(ValueError, match="capacity"):
+        SlidingWindowStats(0, F_DIM, C_DIM)
+
+
+# ---------------------------------------------------------------------------
+# Drift detector
+# ---------------------------------------------------------------------------
+
+def test_detector_warmup_never_signals():
+    d = DriftDetector(threshold=0.1, warmup=3)
+    assert not d.update(0.9) and not d.update(0.1) and not d.update(0.5)
+    assert d.baseline == pytest.approx(np.mean([0.9, 0.1, 0.5]))
+    assert not d.drifting
+
+
+def test_detector_level_state_frozen_baseline_and_recovery():
+    """Drifting is a level with a FROZEN baseline: it stays armed through
+    continued low scores, ignores partial rebounds, and disarms only on
+    recovery — which re-seeds the baseline at the recovered level."""
+    d = DriftDetector(threshold=0.2, alpha=0.5, warmup=1)
+    d.update(0.9)                        # seeds baseline
+    assert d.update(0.3)                 # 0.9 − 0.3 > 0.2 → drift
+    frozen = d.baseline
+    assert d.update(0.4) and d.baseline == frozen     # still armed, frozen
+    assert not d.update(0.75)            # 0.9 − 0.75 ≤ 0.2 → recovered
+    assert d.baseline == 0.75            # re-seeded, NOT the old EWMA
+    # armed-but-calm scores move the baseline by EWMA
+    d.update(0.85)
+    assert d.baseline == pytest.approx(0.75 + 0.5 * (0.85 - 0.75))
+    assert d.history == [0.9, 0.3, 0.4, 0.75, 0.85] and d.seen == 5
+
+
+def test_detector_validation():
+    with pytest.raises(ValueError, match="alpha"):
+        DriftDetector(alpha=0.0)
+    with pytest.raises(ValueError, match="threshold"):
+        DriftDetector(threshold=0.0)
+    with pytest.raises(ValueError, match="warmup"):
+        DriftDetector(warmup=0)
+
+
+# ---------------------------------------------------------------------------
+# Sources
+# ---------------------------------------------------------------------------
+
+def test_array_source_chunks_and_validation():
+    x = np.arange(10, dtype=np.float32).reshape(10, 1)
+    y = np.arange(10, dtype=np.int32)
+    chunks = list(ArraySource(x, y, chunk_rows=4).chunks())
+    assert len(chunks) == 2              # final short chunk dropped
+    np.testing.assert_array_equal(chunks[1][0], x[4:8])
+    with pytest.raises(ValueError, match="chunk_rows"):
+        ArraySource(x, y, chunk_rows=0)
+    with pytest.raises(ValueError, match="mismatch"):
+        ArraySource(x, y[:5], chunk_rows=4)
+
+
+def test_file_source_carry_over_chunking(tmp_path):
+    """Ragged shard files (7 rows each) re-chunk to the same stream as
+    the arrays they were written from — rows carry across file
+    boundaries, only the final short chunk is lost."""
+    x = np.arange(50, dtype=np.float32).reshape(50, 1)
+    y = (np.arange(50) % 3).astype(np.int32)
+    paths = write_shard_files(x, y, str(tmp_path), rows_per_file=7)
+    assert len(paths) == 8 and paths == sorted(paths)
+    fs = FileSource(str(tmp_path / "shard-*.npz"), chunk_rows=8)
+    chunks = list(fs.chunks())
+    assert len(chunks) == 6              # 48 of 50 rows
+    np.testing.assert_array_equal(
+        np.concatenate([c[0] for c in chunks]), x[:48])
+    np.testing.assert_array_equal(
+        np.concatenate([c[1] for c in chunks]), y[:48])
+    with pytest.raises(FileNotFoundError, match="matched no files"):
+        list(FileSource(str(tmp_path / "none-*.npz"), chunk_rows=4)
+             .chunks())
+
+
+def test_synthetic_drift_source_labels_and_determinism():
+    src = SyntheticDriftSource(n_chunks=4, chunk_rows=16, drift_at=2,
+                               seed=3, label_shift=5, class_filter=(0, 1),
+                               n_per_class=6)
+    a, b = list(src.chunks()), list(src.chunks())
+    for (ax, ay), (bx, by) in zip(a, b):      # deterministic per seed
+        np.testing.assert_array_equal(ax, bx)
+        np.testing.assert_array_equal(ay, by)
+    assert src.num_classes == 10
+    # pre-drift: the filtered classes; post-drift: same glyphs, labels
+    # permuted over the FULL class space
+    assert set(np.concatenate([a[0][1], a[1][1]])) <= {0, 1}
+    assert set(np.concatenate([a[2][1], a[3][1]])) <= {5, 6}
+    np.testing.assert_array_equal(          # features did not shift
+        np.sort(a[2][1]), np.sort((a[2][1] - 5) % 10 + 5))
+
+
+def test_member_streams_seed_rule_and_round_robin():
+    """Chunk t goes to member t % k; member i's within-chunk shuffle is
+    the (t-th) draw of ``default_rng(seed + i)`` — skipped chunks burn a
+    draw so the stream stays aligned with the batch runner's rule."""
+    x = np.arange(16, dtype=np.float32).reshape(16, 1)
+    y = np.arange(16, dtype=np.int32)
+    src = ArraySource(x, y, chunk_rows=4)
+    s0, s1 = member_streams(src, 2, seed=50)
+    parts1 = list(s1)
+    assert len(parts1) == 2              # chunks 1 and 3 of 4
+    rng = np.random.default_rng(50 + 1)
+    rng.permutation(4)                   # burned for chunk 0 (member 0's)
+    np.testing.assert_array_equal(parts1[0].x, x[4:8][rng.permutation(4)])
+    # disjoint deal: members 0+1 together cover every row exactly once
+    rows = np.concatenate([p.x for p in list(s0)] +
+                          [p.x for p in parts1])
+    assert sorted(rows.ravel().tolist()) == x.ravel().tolist()
+    with pytest.raises(ValueError, match="k must be"):
+        member_streams(src, 0)
+    with pytest.raises(ValueError, match="sources for"):
+        member_streams([src], 2, per_member=True)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan.member_init (the streaming block-continuation hook)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def parts():
+    ds = make_extended_mnist(n_per_class=12, seed=0)
+    return partition_iid(ds.x, ds.y, k=2, seed=0)
+
+
+def test_member_init_sequential_matches_stacked(parts):
+    """Distinct per-member inits through ``member_init`` train to the
+    same members on both streaming backends (the cross-backend tolerance
+    of the batch runner), and a frozen (epochs=0) block passes each
+    member's init through untouched."""
+    init = cnn.init_params(CFG, KEY)
+    inits = [jax.tree.map(lambda a, d=i: a + 0.01 * (d + 1), init)
+             for i in range(2)]
+    mk_plan = lambda: ExecutionPlan(
+        epochs=1, lr_schedule=lambda e: 0.05, batch_size=16, rounds=1,
+        member_seeds=[1000, 1001], member_init=inits)
+    seq = make_executor("sequential").execute(CFG, init, parts, mk_plan())
+    st_ = make_executor("stacked").execute(CFG, init, parts, mk_plan())
+    for a, b in zip(seq.members, st_.members):
+        for la, lb in zip(jax.tree.leaves(a.cnn_params),
+                          jax.tree.leaves(b.cnn_params)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=1e-3, atol=5e-5)
+    frozen = make_executor("stacked").execute(
+        CFG, init, parts, ExecutionPlan(epochs=0, lr_schedule=None,
+                                        batch_size=16, rounds=1,
+                                        member_init=inits))
+    for m, ini in zip(frozen.members, inits):
+        for la, lb in zip(jax.tree.leaves(m.cnn_params),
+                          jax.tree.leaves(ini)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_member_init_validation(parts):
+    init = cnn.init_params(CFG, KEY)
+    with pytest.raises(ValueError, match="member_init"):
+        make_executor("stacked").execute(
+            CFG, init, parts, ExecutionPlan(
+                epochs=0, lr_schedule=None, batch_size=16, rounds=1,
+                member_init=[init]))            # 1 init for 2 members
+
+
+# ---------------------------------------------------------------------------
+# StreamingRun end to end
+# ---------------------------------------------------------------------------
+
+def _streams(k=2, seed=0, rows=32, chunks=12):
+    ds = make_extended_mnist(n_per_class=40, seed=seed)
+    idx = np.random.default_rng(seed).permutation(len(ds.x))[:rows * chunks]
+    src = ArraySource(np.asarray(ds.x)[idx], np.asarray(ds.y)[idx],
+                      chunk_rows=rows)
+    return member_streams(src, k, seed=1000)
+
+
+def _run(sync="rounds", sync_every=0, strategy="uniform", **sc_kw):
+    sc_kw.setdefault("window_chunks", 3)
+    sc_kw.setdefault("holdout_rows", 8)
+    return StreamingRun(CFG, MapConfig(epochs=0, batch_size=16),
+                        ReduceConfig(sync=sync, strategy=strategy),
+                        StreamConfig(sync_every=sync_every, **sc_kw))
+
+
+def test_windowed_beta_is_exact_over_window():
+    """epochs=0 is the closed-form regime: each member's β is EXACTLY the
+    solve over its window total, the window never exceeds capacity, and
+    the equivalence gate holds at stream end."""
+    res = _run(verify_every=2).run(_streams(), KEY)
+    assert res.chunks == 6 and res.backend == "stacked"
+    for i, (m, w) in enumerate(zip(res.members, res.windows)):
+        assert len(w) == 3 and w.evicted == res.chunks - 3
+        w.verify()
+        np.testing.assert_allclose(
+            np.asarray(m.beta),
+            np.asarray(elm.solve_beta(elm.ELMStats(
+                jnp.asarray(w.total().u), jnp.asarray(w.total().v),
+                jnp.asarray(w.total().n)), CFG.elm_lambda)),
+            rtol=1e-5, atol=1e-5)
+    assert [r.window_err is not None for r in res.records] == \
+        [t % 2 == 1 for t in range(6)]
+
+
+def test_sync_policies_fire_expected_chunks(tmp_path):
+    """never → only the initial publish; cadence N → every N chunks on
+    top of it; published checkpoints land at exactly the sync chunks."""
+    never = _run().run(_streams(), KEY)
+    assert never.sync_chunks == [0]
+    assert never.last_published is not None
+    cad = _run(sync_every=2).run(
+        _streams(), KEY, checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    assert cad.sync_chunks == [0, 1, 3, 5]
+    assert list_steps(str(tmp_path), run_state.ROUND) == [0, 1, 3, 5]
+    assert run_state.restore_round(str(tmp_path), 3).meta["reason"] == \
+        "cadence"
+    silent = _run(initial_publish=False).run(_streams(), KEY)
+    assert silent.syncs == [] and silent.last_published is None
+    capped = _run(max_chunks=2).run(_streams(), KEY)
+    assert capped.chunks == 2
+
+
+def test_drift_policy_end_to_end(tmp_path):
+    """An injected label-permutation shift: the prequential scores
+    collapse at ``drift_at``, the detectors arm, the syncs land at
+    IRREGULAR chunk indices (a gap > 1 from the initial publish), and
+    every published round is a durable checkpoint."""
+    k = 2
+    srcs = [SyntheticDriftSource(n_chunks=9, chunk_rows=32, drift_at=4,
+                                 seed=11 + i, label_shift=5, n_per_class=8)
+            for i in range(k)]
+    streams = member_streams(srcs, k, seed=1000, per_member=True)
+    events = []
+    res = _run(sync="drift", drift_threshold=0.3, drift_warmup=2,
+               verify_every=3).run(
+        streams, KEY, checkpoint=CheckpointConfig(dir=str(tmp_path)),
+        sync_hook=events.append)
+    assert res.sync_chunks[0] == 0
+    drift_syncs = [s for s in res.syncs if s.reason == "drift"]
+    assert drift_syncs and all(s.chunk >= 4 for s in drift_syncs)
+    assert any(b - a > 1 for a, b in
+               zip(res.sync_chunks, res.sync_chunks[1:]))
+    # the score collapse IS the trigger: pre-drift holdout ≫ at-drift
+    assert np.mean(res.records[4].scores) < np.mean(res.records[3].scores)
+    assert all(drift_syncs[0].chunk == s.chunk for s in
+               [drift_syncs[0]]) and drift_syncs[0].drifting
+    assert list_steps(str(tmp_path), run_state.ROUND) == res.sync_chunks
+    assert [e.chunk for e in events] == res.sync_chunks
+
+
+def test_watcher_hot_reloads_irregular_rounds(tmp_path):
+    """ISSUE-8 regression: ``CheckpointWatcher``/``latest_ready_round``
+    must stage drift-triggered rounds at ARBITRARY gaps (0 → 7 → 11) —
+    no consecutive-round assumption — and skip a torn newest file."""
+    res = _run().run(_streams(),
+                     KEY, checkpoint=CheckpointConfig(dir=str(tmp_path)))
+    stats = run_state.stack_stats([w.total() for w in res.windows])
+    for r in (7, 11):
+        run_state.save_round(str(tmp_path), r, members=res.stacked,
+                             stats=stats, averaged=res.averaged,
+                             meta={"round": r, "final": False})
+    scorer = BucketedScorer(
+        CFG, run_state.restore_round(str(tmp_path), 0).members,
+        max_batch=8)
+    scorer.warmup()
+    budget = scorer.compile_count()
+    srv = EnsembleServer(scorer, ServeConfig(max_batch=8, max_wait_ms=1.0)
+                         ).start(warmup=False)
+    try:
+        watcher = CheckpointWatcher(str(tmp_path), srv, poll_ms=5,
+                                    start_round=0)
+        assert watcher.poll_once() == 11         # 0 → 11 in ONE poll
+        assert watcher.poll_once() is None       # nothing newer
+        run_state.save_round(str(tmp_path), 25, members=res.stacked,
+                             stats=stats, averaged=res.averaged,
+                             meta={"round": 25, "final": False})
+        faults.inject_torn_save(str(tmp_path), run_state.ROUND, 40,
+                                crash=False)
+        assert watcher.poll_once() == 25         # torn round 40 skipped
+        assert watcher.current_round == 25
+    finally:
+        srv.close()
+    assert scorer.compile_count() == budget      # swaps recompiled nothing
+
+
+def test_shard_weighted_uses_window_rows():
+    run = _run(strategy="shard_weighted")
+    res = run.run(_streams(), KEY)
+    assert run._weights(res.windows) == \
+        [float(w.total().n) for w in res.windows]
+    with pytest.raises(ValueError, match="explicit weights"):
+        _run(strategy=[1.0, 2.0, 3.0]).run(_streams(), KEY)
+
+
+def test_stream_validation():
+    with pytest.raises(ValueError, match="backend"):
+        StreamingRun(CFG, MapConfig(epochs=0, batch_size=16,
+                                    backend="mesh"))
+    with pytest.raises(ValueError, match="rounds=1"):
+        StreamingRun(CFG, MapConfig(epochs=2, lr_schedule=lambda e: 0.05,
+                                    batch_size=16),
+                     ReduceConfig(rounds=2))
+    with pytest.raises(ValueError, match="sync"):
+        ReduceConfig(sync="bogus")
+    with pytest.raises(ValueError, match="rounds"):
+        ReduceConfig(sync="drift", rounds=2)
+    with pytest.raises(ValueError, match="StreamingRun"):
+        AveragingRun(CFG, MapConfig(epochs=0, batch_size=16),
+                     ReduceConfig(sync="drift")).run([], KEY)
+    with pytest.raises(ValueError, match="window_chunks"):
+        StreamConfig(window_chunks=0)
+    with pytest.raises(ValueError, match="holdout_rows"):
+        StreamConfig(holdout_rows=0)
+    with pytest.raises(ValueError, match=">= 0"):
+        StreamConfig(sync_every=-1)
+    with pytest.raises(ValueError, match="at least one"):
+        _run().run([], KEY)
+    with pytest.raises(ValueError, match="no chunks"):
+        _run().run([[], []], KEY)
+    with pytest.raises(ValueError, match="CheckpointConfig"):
+        _run().run(_streams(), KEY, checkpoint="/tmp/x")
