@@ -153,6 +153,21 @@ SCHEMAS = {
                   "failed": int, "dropped": int, "recompiles": int,
                   "buckets": [int], "compile_count": int},
     },
+    "BENCH_hierarchical_reduce": {
+        "k": int, "k_sweep": [int], "devices": int, "epochs": int,
+        "rounds": int, "batch_size": int, "feature_dim": int,
+        "topologies": [{"hosts": int, "pods": int, "axes": str,
+                        "allreduce_per_sync": int,
+                        "allreduce_per_reduce": int, "run_us": NUM,
+                        "acc": NUM, "speedup_vs_flat": NUM,
+                        "per_k": [{"k": int, "k_pad": int,
+                                   "sync_per_chip_bytes": NUM,
+                                   "reduce_per_chip_bytes": NUM}]}],
+        "parity": {"max_abs_diff": NUM, "rtol": NUM, "atol": NUM,
+                   "members_bit_equal": bool, "acc_max_abs_diff": NUM,
+                   "acc_tol": NUM},
+        "cost_model": str, "backend": str,
+    },
 }
 
 
@@ -187,6 +202,28 @@ INVARIANTS = {
     "BENCH_map_phase_chunked": [
         ("chunked peak stays under the monolithic epoch buffer",
          lambda d: d["peak_bytes"] < d["epoch_bytes"]),
+    ],
+    "BENCH_hierarchical_reduce": [
+        ("two all-reduces per sync on every ('host','pod') topology",
+         lambda d: all(t["allreduce_per_sync"] == 2 and
+                       t["allreduce_per_reduce"] == 2
+                       for t in d["topologies"] if t["hosts"] > 1)),
+        ("one all-reduce per sync on the flat 1-D baseline",
+         lambda d: all(t["allreduce_per_sync"] == 1 and
+                       t["allreduce_per_reduce"] == 1
+                       for t in d["topologies"] if t["hosts"] == 1)),
+        ("a flat baseline topology is present",
+         lambda d: any(t["hosts"] == 1 for t in d["topologies"])),
+        ("flat vs hierarchical averaged models within the f32 "
+         "summation-order tolerance",
+         lambda d: d["parity"]["max_abs_diff"] <= 1e-5 and
+         d["parity"]["members_bit_equal"]),
+        ("flat vs hierarchical multi-round accuracy within tolerance",
+         lambda d: d["parity"]["acc_max_abs_diff"] <=
+         d["parity"]["acc_tol"]),
+        ("every topology covers the same device fleet",
+         lambda d: all(t["hosts"] * t["pods"] == d["devices"]
+                       for t in d["topologies"])),
     ],
     "BENCH_stream_map": [
         ("drift-triggered sync beats never-sync on the post-drift "

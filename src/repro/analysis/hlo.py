@@ -5,9 +5,12 @@ compiled and checks the repo's cross-backend averaging contracts on the
 artifact itself, one place instead of per-test string matching:
 
 * **collective count** — the MeshExecutor's Reduce and every inter-round
-  sync lower to EXACTLY ONE all-reduce (the flat-psum contract of
-  ``averaging.psum_weighted_mean_members``); the epoch scan lowers to
-  ZERO collectives (members are independent between syncs).
+  sync lower to EXACTLY ONE all-reduce on the flat 1-D member mesh (the
+  flat-psum contract of ``averaging.psum_weighted_mean_members``) and
+  EXACTLY TWO on the hierarchical ``('host', 'pod')`` mesh (intra-host
+  then inter-host — ``hierarchical_psum_weighted_mean_members``); the
+  epoch scan lowers to ZERO collectives (members are independent
+  between syncs).
 * **donation aliasing** — where a jit wrapper claims
   ``donate_argnames``, the compiled module must actually carry
   input→output aliases (``input_output_alias``); a silently dropped
@@ -131,8 +134,17 @@ def check_collectives(program, *, expect: Dict[str, int],
 
 
 def check_one_all_reduce(program, *, name: str = "one-all-reduce") -> Check:
-    """Exactly one all-reduce, nothing else — the Reduce/sync contract."""
+    """Exactly one all-reduce, nothing else — the flat-mesh Reduce/sync
+    contract."""
     return check_collectives(program, expect={"all-reduce": 1}, name=name)
+
+
+def check_two_all_reduces(program, *,
+                          name: str = "two-all-reduces") -> Check:
+    """Exactly two all-reduces, nothing else — the hierarchical
+    ``('host', 'pod')`` Reduce/sync contract: one intra-host, one
+    inter-host, independent of fleet size."""
+    return check_collectives(program, expect={"all-reduce": 2}, name=name)
 
 
 def check_no_collectives(program, *,
@@ -217,9 +229,11 @@ def audit_executor(cfg, backend: str, *, mesh=None, k: int = 4,
     * ``"stacked"`` — the fused ``_round_sync`` (f32 accumulation, zero
       collectives) and the donated ``_stacked_epoch`` (aliases present,
       zero collectives).
-    * ``"mesh"`` — the ``_mesh_sync`` and ``_mesh_reduce`` one-all-reduce
-      + f32 contracts, and the ``_mesh_epoch`` zero-collective +
-      donation contracts, on a real (or forced-host) device mesh.
+    * ``"mesh"`` — the ``_mesh_sync`` and ``_mesh_reduce`` collective
+      budget (ONE all-reduce on a flat 1-D member mesh, TWO on the
+      hierarchical ``('host', 'pod')`` mesh) + f32 contracts, and the
+      ``_mesh_epoch`` zero-collective + donation contracts, on a real
+      (or forced-host) device mesh.
     """
     from repro.core import elm, executor
     from repro.models import cnn
@@ -272,23 +286,30 @@ def audit_executor(cfg, backend: str, *, mesh=None, k: int = 4,
         ex = executor.MeshExecutor(mesh=mesh)
         ex._begin(cfg, k)
         mesh = ex.mesh
+        # the per-sync collective budget is a function of the member-mesh
+        # topology: one flat psum on ('pod',), the staged intra-host →
+        # inter-host pair on ('host', 'pod')
+        check_sync_collectives = (check_two_all_reduces
+                                  if "host" in mesh.shape
+                                  else check_one_all_reduce)
         params_k = ex._place_params(cnn.init_params(cfg, key))
         stats_k = ex._zero_stats(F, C)
         w = ex._weights_dev(None)
 
         sync = executor._mesh_sync.lower(mesh, params_k, w)
         rep = AuditReport("mesh/_mesh_sync")
-        rep.checks += [check_one_all_reduce(sync),
+        rep.checks += [check_sync_collectives(sync),
                        check_accum_dtype(sync)]
         reports.append(rep)
 
         beta_k = jax.device_put(
             jnp.zeros((ex._k_pad, F, C)),
             jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec("pod")))
+                mesh, jax.sharding.PartitionSpec(
+                    executor._member_axis_entry(mesh))))
         red = executor._mesh_reduce.lower(mesh, (params_k, beta_k), w)
         rep = AuditReport("mesh/_mesh_reduce")
-        rep.checks += [check_one_all_reduce(red),
+        rep.checks += [check_sync_collectives(red),
                        check_accum_dtype(red)]
         reports.append(rep)
 

@@ -2,7 +2,7 @@
 lines 18-20): Ŵ = 1/k Σ Wᵢ for every parameter (CNN kernels, biases, ELM β,
 and — in this framework — any backbone pytree).
 
-Three deployment flavours:
+Five deployment flavours:
 * ``average_trees``       — host-level list-of-members mean.
 * ``average_member_dim``  — members stacked on a leading dim (the multi-pod
                             layout: member dim sharded over the 'pod' axis;
@@ -11,7 +11,14 @@ Three deployment flavours:
                             pmean per leaf.
 * ``psum_weighted_mean_members`` — inside shard_map over the member axis:
                             the whole (weighted) tree mean as ONE collective
-                            (flat psum) — the MeshExecutor's Reduce/sync.
+                            (flat psum) — the MeshExecutor's Reduce/sync and
+                            the bit-reference for the hierarchical flavour.
+* ``hierarchical_psum_weighted_mean_members`` — the same weighted mean
+                            staged over a multi-axis member mesh (e.g.
+                            ``('host', 'pod')``): one intra-host partial
+                            psum then one inter-host psum, so the sync
+                            compiles to exactly TWO collectives regardless
+                            of global fleet size.
 """
 from __future__ import annotations
 
@@ -95,5 +102,35 @@ def psum_weighted_mean_members(tree, local_weights, axis_name: str):
     flat, unravel = ravel_pytree((parts, jnp.sum(local_weights,
                                                  dtype=jnp.float32)))
     parts, wsum = unravel(jax.lax.psum(flat, axis_name))
+    return jax.tree.map(lambda s, ref: (s / wsum).astype(ref.dtype),
+                        parts, tree)
+
+
+def hierarchical_psum_weighted_mean_members(tree, local_weights,
+                                            axis_names: Sequence[str]):
+    """The weighted member mean staged over a multi-axis member mesh.
+
+    Same contract as ``psum_weighted_mean_members`` — call inside shard_map
+    with the member dim sharded over ``axis_names`` jointly — but the flat
+    f32 partial-sum vector is reduced one mesh axis at a time, innermost
+    first: on a ``('host', 'pod')`` mesh that is one INTRA-host psum over
+    ``'pod'`` (devices sharing a host coordinate) followed by one
+    INTER-host psum over ``'host'``. The two psums are data-dependent, so
+    XLA's collective combiner cannot merge them: the compiled HLO carries
+    exactly ``len(axis_names)`` all-reduces per sync, each scoped to one
+    level of the physical hierarchy, regardless of global fleet size. The
+    weight total rides the same flat vector, so zero-weight ghost members
+    (pad-and-mask) stay arithmetically invisible at both levels.
+
+    With a single axis name this degenerates to the flat one-collective
+    reference (identical psum operand, identical summation order)."""
+    parts = jax.tree.map(
+        lambda a: jnp.tensordot(local_weights.astype(jnp.float32),
+                                a.astype(jnp.float32), axes=1), tree)
+    flat, unravel = ravel_pytree((parts, jnp.sum(local_weights,
+                                                 dtype=jnp.float32)))
+    for name in reversed(tuple(axis_names)):   # innermost (intra-host) first
+        flat = jax.lax.psum(flat, name)
+    parts, wsum = unravel(flat)
     return jax.tree.map(lambda s, ref: (s / wsum).astype(ref.dtype),
                         parts, tree)

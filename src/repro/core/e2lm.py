@@ -34,7 +34,10 @@ def reduce_stats(shards: Sequence[ELMStats]) -> ELMStats:
     return out
 
 
-def psum_stats(local: ELMStats, axis_name: str) -> ELMStats:
+def psum_stats(local: ELMStats, axis_name) -> ELMStats:
+    """Cross-member stats sum over one named axis or a tuple of axes (the
+    hierarchical ('host', 'pod') member mesh) — ``jax.lax.psum`` takes
+    both forms."""
     return ELMStats(jax.lax.psum(local.u, axis_name),
                     jax.lax.psum(local.v, axis_name),
                     jax.lax.psum(local.n, axis_name))

@@ -72,6 +72,7 @@ except ImportError:                # jax 0.4.x
 from repro.checkpoint import run_state
 from repro.core import elm
 from repro.core.averaging import (average_member_dim, broadcast_member_dim,
+                                  hierarchical_psum_weighted_mean_members,
                                   psum_weighted_mean_members)
 from repro.core.cnn_elm import (CNNELMModel, StackedMembers, _bump,
                                 average_models, stack_models,
@@ -589,6 +590,29 @@ def _member_specs(tree, mesh):
     return sharding.member_dim_specs(tree, mesh)
 
 
+def _member_axes(mesh) -> tuple:
+    """The mesh axes carrying the member dim: ``('host', 'pod')`` on the
+    hierarchical 2-D topology, ``('pod',)`` on the flat 1-D one."""
+    return ("host", "pod") if "host" in mesh.shape else ("pod",)
+
+
+def _member_axis_entry(mesh):
+    """The PartitionSpec entry for the member dim on ``mesh`` — the tuple
+    ``('host', 'pod')`` or the bare ``'pod'``."""
+    axes = _member_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _psum_weighted_mean(tree, weights, mesh):
+    """Mesh-topology dispatch: the flat ONE-collective psum on a 1-D
+    member mesh (the bit-reference), the staged TWO-collective
+    intra-host → inter-host psum on the 2-D ``('host', 'pod')`` mesh."""
+    axes = _member_axes(mesh)
+    if len(axes) == 1:
+        return psum_weighted_mean_members(tree, weights, axes[0])
+    return hierarchical_psum_weighted_mean_members(tree, weights, axes)
+
+
 def _replicated_specs(tree):
     return jax.tree.map(lambda a: P(*([None] * a.ndim)), tree)
 
@@ -627,52 +651,59 @@ def _mesh_solve(mesh, stats_k, lam):
 
     return shard_map(local, mesh=mesh,
                      in_specs=(_member_specs(stats_k, mesh),),
-                     out_specs=P("pod", None, None))(stats_k)
+                     out_specs=P(_member_axis_entry(mesh), None, None))(
+        stats_k)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))
 def _mesh_reduce(mesh, tree, weights):
-    """The Reduce as ONE in-mesh all-reduce: weighted mean over the global
-    member dim via ``psum_weighted_mean_members`` (flat psum), replicated
-    output. ``weights`` is the full padded member-weight vector — zeros
-    drop padded members exactly."""
+    """The Reduce as the minimum in-mesh collective count: weighted mean
+    over the global member dim via one flat psum on a 1-D mesh (the
+    bit-reference) or the staged intra-host → inter-host pair on the 2-D
+    ``('host', 'pod')`` mesh — ONE or TWO all-reduces, never more,
+    replicated output. ``weights`` is the full padded member-weight
+    vector — zeros drop padded members exactly."""
     def local(t, w):
-        return psum_weighted_mean_members(t, w, "pod")
+        return _psum_weighted_mean(t, w, mesh)
 
     return shard_map(local, mesh=mesh,
-                     in_specs=(_member_specs(tree, mesh), P("pod")),
+                     in_specs=(_member_specs(tree, mesh),
+                               P(_member_axis_entry(mesh))),
                      out_specs=_replicated_specs(
                          jax.tree.map(lambda a: a[0], tree)))(tree, weights)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))
 def _mesh_sync(mesh, params_k, weights):
-    """The inter-round sync, still ONE all-reduce: the same flat-psum
-    weighted mean, broadcast straight back to the local member slots —
-    params never leave the mesh between rounds. NOT donated: the round's
-    lazy snapshot/averaged closures may still read the pre-sync params
-    after the sync fires (same contract as ``_round_sync``)."""
+    """The inter-round sync, same collective budget as ``_mesh_reduce``
+    (one all-reduce flat, two hierarchical): the psum weighted mean
+    broadcast straight back to the local member slots — params never
+    leave the mesh between rounds. NOT donated: the round's lazy
+    snapshot/averaged closures may still read the pre-sync params after
+    the sync fires (same contract as ``_round_sync``)."""
     pspecs = _member_specs(params_k, mesh)
 
     def local(p, w):
-        avg = psum_weighted_mean_members(p, w, "pod")
+        avg = _psum_weighted_mean(p, w, mesh)
         k_local = jax.tree.leaves(p)[0].shape[0]
         return broadcast_member_dim(avg, k_local)
 
-    return shard_map(local, mesh=mesh, in_specs=(pspecs, P("pod")),
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspecs, P(_member_axis_entry(mesh))),
                      out_specs=pspecs)(params_k, weights)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "lam"))
 def _mesh_e2lm_beta(mesh, stats_k, lam):
     """E²LM cross-member Reduce (``e2lm.psum_stats``): sum every member's
-    sufficient statistics over the mesh and solve ONE global β — the exact
+    sufficient statistics over the mesh (both member axes at once on the
+    hierarchical topology) and solve ONE global β — the exact
     no-partition ELM readout, computed from the Map phase's stats without
     ever gathering them. Padded members hold zero stats, so they vanish
     from the sums by construction."""
     def local(s):
         loc = type(s)(s.u.sum(0), s.v.sum(0), s.n.sum(0))
-        return elm.solve_beta(psum_stats(loc, "pod"), lam)
+        return elm.solve_beta(psum_stats(loc, _member_axes(mesh)), lam)
 
     return shard_map(local, mesh=mesh,
                      in_specs=(_member_specs(stats_k, mesh),),
@@ -680,15 +711,20 @@ def _mesh_e2lm_beta(mesh, stats_k, lam):
 
 
 class MeshExecutor(_StackedBase):
-    """The multi-pod Map phase: stacked scan body shard_map-ed over 'pod'.
+    """The multi-pod Map phase: stacked scan body shard_map-ed over the
+    member mesh axes.
 
     ``mesh`` must carry a ``'pod'`` axis (default: a 1-D ``('pod',)`` mesh
     over every visible device — ``repro.launch.mesh.make_member_mesh``).
-    Members pad to a pod-count multiple (zero data, zero mask, zero Reduce
-    weight — arithmetically invisible, stripped from the snapshot). The
-    per-round cost model: epochs/rounds scan dispatches with zero
-    collectives, then exactly ONE all-reduce for the sync (or the final
-    Reduce). See docs/perf.md §Mesh scaling."""
+    With an additional ``'host'`` axis (``make_member_mesh(hosts=...)``)
+    the member dim shards over ``('host', 'pod')`` jointly and every
+    Reduce/sync stages hierarchically: intra-host psum then inter-host
+    psum. Members pad to a device-count multiple (zero data, zero mask,
+    zero Reduce weight — arithmetically invisible, stripped from the
+    snapshot). The per-round cost model: epochs/rounds scan dispatches
+    with zero collectives, then exactly ONE (flat 1-D) or TWO
+    (hierarchical 2-D) all-reduces for the sync (or the final Reduce),
+    regardless of fleet size. See docs/perf.md §Mesh scaling."""
 
     name = "mesh"
 
@@ -705,8 +741,10 @@ class MeshExecutor(_StackedBase):
                 f"{tuple(self.mesh.shape)}")
         self._cfg = cfg
         self._k = k
-        pods = self.mesh.shape["pod"]
-        self._k_pad = -(-k // pods) * pods      # ceil to a pod multiple
+        slots = 1                               # devices holding members:
+        for a in _member_axes(self.mesh):       # pods, or hosts x pods
+            slots *= self.mesh.shape[a]
+        self._k_pad = -(-k // slots) * slots    # ceil to a slot multiple
         spec = sharding.resolve_spec((self._k_pad,), ("member",), self.mesh)
         if spec[0] is None:      # padding guarantees divisibility, so the
             raise ValueError(    # fallback can only mean bad custom rules
@@ -721,8 +759,9 @@ class MeshExecutor(_StackedBase):
         w = self._member_mask.copy()
         if weights is not None:
             w[:self._k] = np.asarray(weights, np.float32)
-        return jax.device_put(jnp.asarray(w),
-                              NamedSharding(self.mesh, P("pod")))
+        return jax.device_put(
+            jnp.asarray(w),
+            NamedSharding(self.mesh, P(_member_axis_entry(self.mesh))))
 
     def _place_params(self, init_params):
         params_k = broadcast_member_dim(init_params, self._k_pad)

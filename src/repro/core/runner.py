@@ -571,12 +571,11 @@ class AveragingRun:
         order is identical whether or not anyone else churned."""
         m, rc = self.map_cfg, self.reduce_cfg
         sched = rc.elastic
-        if m.backend not in ("sequential", "stacked"):
-            raise ValueError(
-                "elastic membership runs on backend 'sequential' or "
-                "'stacked' (re-stacked at membership changes) — the mesh "
-                "layout would re-pad and re-shard mid-run; run mesh with "
-                "fixed membership")
+        # all three backends run elastic rounds: each round block is one
+        # re-stacked executor.execute() over the CURRENT members, and the
+        # mesh backend's _begin(cfg, k) re-pads and re-shards the pod
+        # layout per block — ghost members are pad-and-mask invisible, so
+        # joiners/leavers only change the padded k and the weight vector
         if m.epochs <= 0:
             raise ValueError("elastic membership needs SGD epochs "
                              "(epochs > 0) to split into rounds")

@@ -18,7 +18,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis -> ordered candidate mesh axes (first that divides & is free wins)
 DEFAULT_RULES = {
-    "member": ("pod",),
+    # the member dim shards over BOTH axes of the hierarchical
+    # ('host', 'pod') mesh when one is in play, else over the flat 1-D
+    # 'pod' axis — the tuple candidate resolves to size 0 (skipped) on
+    # meshes without a 'host' axis
+    "member": (("host", "pod"), "pod"),
     "batch": ("data",),
     "vocab": ("model",),
     "heads": ("model",),

@@ -60,11 +60,31 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
-def make_member_mesh(num_pods: int | None = None):
-    """A 1-D ``('pod',)`` mesh for the mesh Map-phase executor
+def make_member_mesh(num_pods: int | None = None, *,
+                     hosts: int | None = None, pods: int | None = None):
+    """The member mesh for the mesh Map-phase executor
     (``runner.MapConfig(backend="mesh")``): one pod per distributed-
-    averaging member group, over the first ``num_pods`` devices (default:
-    all of them)."""
+    averaging member group.
+
+    Default is the flat 1-D ``('pod',)`` mesh over the first ``num_pods``
+    devices (all of them when ``None``) — every Reduce/sync is ONE global
+    all-reduce. Passing ``hosts=`` builds the 2-D ``('host', 'pod')``
+    topology instead: ``hosts`` machines of ``pods`` local pods each
+    (``pods`` defaults to ``devices // hosts``), under which the executor
+    stages each Reduce/sync as an intra-host psum then an inter-host psum
+    — exactly TWO collectives regardless of fleet size."""
+    if hosts is not None:
+        if pods is None:
+            n = len(jax.devices())
+            if n % hosts:
+                raise ValueError(
+                    f"make_member_mesh: {n} devices do not split over "
+                    f"hosts={hosts}; pass pods= explicitly")
+            pods = n // hosts
+        return jax.make_mesh((hosts, pods), ("host", "pod"))
+    if pods is not None:
+        raise ValueError("make_member_mesh: pods= requires hosts= "
+                         "(use num_pods for the flat 1-D mesh)")
     n = len(jax.devices()) if num_pods is None else num_pods
     return jax.make_mesh((n,), ("pod",))
 

@@ -13,9 +13,10 @@ streams* and re-synchronize when the data distribution moves.
   ``ELMStats`` deltas whose running total is rank-updated on push and
   rank-DOWNdated on evict (``elm.downdate_stats``), with an equivalence
   gate against recompute-from-scratch.
-* ``drift``    — ``DriftDetector``: per-member held-out score tracked
-  per chunk against an EWMA baseline; a drop beyond the threshold is the
-  drift signal.
+* ``drift``    — per-member held-out score tracked per chunk:
+  ``DriftDetector`` (EWMA baseline, drop threshold) and
+  ``PageHinkleyDetector`` (cumulative-deviation PH test), both behind
+  ``make_detector`` / ``StreamConfig.drift_detector``.
 * ``run``      — ``StreamingRun``: the chunk loop (prequential
   score → train block through the executor → window update → windowed β)
   plus the sync policies ``ReduceConfig(sync="rounds"|"drift")`` and
@@ -24,7 +25,8 @@ streams* and re-synchronize when the data distribution moves.
 See docs/streaming.md for the window/downdate contract, the drift
 signal and the sync-policy semantics.
 """
-from repro.stream.drift import DriftDetector  # noqa: F401
+from repro.stream.drift import (DriftDetector,  # noqa: F401
+                                PageHinkleyDetector, make_detector)
 from repro.stream.run import (StreamConfig, StreamingRun,  # noqa: F401
                               StreamRecord, StreamResult, SyncEvent)
 from repro.stream.sources import (ArraySource, FileSource,  # noqa: F401

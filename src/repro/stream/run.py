@@ -47,6 +47,8 @@ computed under the params of their time).
 from __future__ import annotations
 
 import functools
+import queue
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -63,10 +65,80 @@ from repro.core.runner import MapConfig, ReduceConfig
 from repro.data.partition import Partition
 from repro.kernels import resolve_use_pallas
 from repro.models import cnn
-from repro.stream.drift import DriftDetector
+from repro.stream.drift import DETECTORS, DriftDetector, make_detector
 from repro.stream.window import SlidingWindowStats
 
 STREAM_BACKENDS = ("sequential", "stacked")
+
+
+# ---------------------------------------------------------------------------
+# Chunk ingestion: synchronous pull, or a bounded-queue prefetch thread
+# ---------------------------------------------------------------------------
+
+def _iter_chunks(streams: Sequence):
+    """Pull one ``Partition`` per member stream per step; stop when ANY
+    stream runs dry (a ragged tail chunk is dropped for every member —
+    the synchronous-loop contract the prefetcher must reproduce)."""
+    its = [iter(s) for s in streams]
+    while True:
+        parts: List[Partition] = []
+        for it in its:
+            p = next(it, None)
+            if p is None:
+                return
+            parts.append(p)
+        yield parts
+
+
+def _iter_chunks_prefetched(streams: Sequence, depth: int):
+    """``_iter_chunks`` staged by a bounded-queue background thread (the
+    serving queue's thread idiom applied to ingestion): the producer
+    reads up to ``depth`` chunk groups ahead while the consumer's
+    training dispatch runs, overlapping source I/O with compute. Only
+    the HOST-side pull moves off-thread — chunk order, the stop-on-dry
+    contract and every downstream byte are identical to the synchronous
+    loop. A source exception is re-raised at the consuming chunk, where
+    the synchronous loop would have hit it."""
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    done = object()
+    stop = threading.Event()
+
+    def produce():
+        try:
+            for parts in _iter_chunks(streams):
+                while not stop.is_set():
+                    try:
+                        q.put(parts, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if stop.is_set():
+                    return
+            item = done
+        except BaseException as e:      # surfaced at the consumer
+            item = e
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    thread = threading.Thread(target=produce, daemon=True,
+                              name="repro-stream-prefetch")
+    thread.start()
+    try:
+        while True:
+            item = q.get()
+            if item is done:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        # consumer stopped early (max_chunks / an error): unblock and
+        # retire the producer so abandoned runs don't pin the sources
+        stop.set()
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
@@ -92,17 +164,22 @@ class StreamConfig:
     ``sync_every`` — the ``sync="rounds"`` cadence in chunks (0 = only
     the initial publish). ``initial_publish`` — publish chunk 0's average
     so a serving endpoint has a model under EVERY policy (including
-    never-sync baselines). ``drift_*`` — per-member ``DriftDetector``
-    parameters. ``verify_every`` — run each window's equivalence gate
+    never-sync baselines). ``drift_detector`` — which per-member
+    detector (``"ewma"`` or ``"page_hinkley"``, ``drift.make_detector``)
+    the ``drift_*`` parameters configure (``drift_alpha`` is EWMA-only,
+    ``drift_delta`` Page-Hinkley-only). ``verify_every`` — run each
+    window's equivalence gate
     (``SlidingWindowStats.verify``) every N chunks (0 = off);
     ``max_chunks`` stops an infinite stream."""
     window_chunks: int = 8
     holdout_rows: int = 32
     sync_every: int = 0
     initial_publish: bool = True
+    drift_detector: str = "ewma"
     drift_threshold: float = 0.2
     drift_alpha: float = 0.2
     drift_warmup: int = 3
+    drift_delta: float = 0.005
     verify_every: int = 0
     verify_rtol: float = 1e-5
     verify_atol: float = 1e-3
@@ -117,6 +194,9 @@ class StreamConfig:
                              f"got {self.holdout_rows}")
         if self.sync_every < 0 or self.verify_every < 0:
             raise ValueError("sync_every/verify_every must be >= 0")
+        if self.drift_detector not in DETECTORS:
+            raise ValueError(f"drift_detector must be one of {DETECTORS}, "
+                             f"got {self.drift_detector!r}")
 
 
 @dataclass
@@ -175,14 +255,23 @@ class StreamingRun:
     """One streaming distributed-averaging experiment: model config +
     Map config + Reduce config (its ``sync`` policy) + stream config.
     ``run(streams, key)`` drives the chunk loop over k per-member
-    ``Partition`` iterables (``sources.member_streams``)."""
+    ``Partition`` iterables (``sources.member_streams``).
+
+    ``prefetch=N`` stages up to N chunk groups ahead on a bounded-queue
+    background ingestion thread (``_iter_chunks_prefetched``), so source
+    reads overlap the training dispatch; 0 keeps the synchronous pull.
+    The results are bit-identical either way — only WHEN the host reads
+    the sources moves, never what it reads."""
     cfg: Any
     map_cfg: MapConfig = field(default_factory=MapConfig)
     reduce_cfg: ReduceConfig = field(default_factory=ReduceConfig)
     stream_cfg: StreamConfig = field(default_factory=StreamConfig)
+    prefetch: int = 0
 
     def __post_init__(self):
         m, rc = self.map_cfg, self.reduce_cfg
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
         if m.backend not in STREAM_BACKENDS:
             raise ValueError(
                 f"streaming runs on backend {STREAM_BACKENDS} (re-stacked "
@@ -220,9 +309,11 @@ class StreamingRun:
         init = cnn.init_params(self.cfg, key)
         windows = [SlidingWindowStats(sc.window_chunks, F, C)
                    for _ in range(k)]
-        detectors = [DriftDetector(threshold=sc.drift_threshold,
+        detectors = [make_detector(sc.drift_detector,
+                                   threshold=sc.drift_threshold,
                                    alpha=sc.drift_alpha,
-                                   warmup=sc.drift_warmup)
+                                   warmup=sc.drift_warmup,
+                                   delta=sc.drift_delta)
                      for _ in range(k)]
         # every chunk block draws this many permutations per member stream
         # (one per epoch; the closed-form pass draws exactly one) — the
@@ -238,106 +329,105 @@ class StreamingRun:
         records: List[StreamRecord] = []
         syncs: List[SyncEvent] = []
         last_published: Optional[CNNELMModel] = None
-        its = [iter(s) for s in streams]
+        chunk_iter = (_iter_chunks_prefetched(streams, self.prefetch)
+                      if self.prefetch > 0 else _iter_chunks(streams))
         t0 = time.perf_counter()
         t = 0
-        while sc.max_chunks is None or t < sc.max_chunks:
-            parts: List[Partition] = []
-            for it in its:
-                p = next(it, None)
-                if p is None:
+        try:
+            for parts in chunk_iter:      # stops when a stream runs dry
+                if sc.max_chunks is not None and t >= sc.max_chunks:
                     break
-                parts.append(p)
-            if len(parts) < k:
-                break                     # a stream ran dry: stop the run
-            # 1) prequential score of each member's held-out slice under
-            #    its CURRENT model (pre-training — out-of-sample)
-            hold = min(sc.holdout_rows, min(len(p.x) for p in parts))
-            x_k = np.stack([np.asarray(p.x[:hold]) for p in parts])
-            scores_k = np.asarray(_holdout_scores(
-                self.cfg,
-                jax.tree.map(lambda *xs: np.stack(xs),
-                             *[mm.cnn_params for mm in models]),
-                np.stack([np.asarray(mm.beta) for mm in models]),
-                x_k, use_pallas=use_pallas))
-            _bump(telemetry)
-            scores = [float(np.mean(scores_k[i].argmax(-1) ==
-                                    np.asarray(parts[i].y[:hold])))
-                      for i in range(k)]
-            for d, s in zip(detectors, scores):
-                d.update(s)
-            # 2) one executor block over the chunk, resumed from each
-            #    member's own params and rng cursor
-            plan = ExecutionPlan(
-                epochs=m.epochs,
-                lr_schedule=(None if m.epochs == 0 else
-                             (lambda e, off=t * m.epochs:
-                              m.lr_schedule(off + e))),
-                batch_size=m.batch_size, seed=m.seed,
-                use_pallas=m.use_pallas, chunk_batches=m.chunk_batches,
-                rounds=1, telemetry=telemetry,
-                member_seeds=[m.seed + i for i in range(k)],
-                start_epochs=[t * draws_per_block] * k,
-                member_init=member_params if t > 0 else None)
-            outcome = executor.execute(self.cfg, init, parts, plan)
-            member_params = [mm.cnn_params for mm in outcome.members]
-            # 3) window push (+ downdate on evict) and ONE batched
-            #    windowed-β solve over every member's window total
-            for i, w in enumerate(windows):
-                w.push(elm.ELMStats(outcome.stats.u[i], outcome.stats.v[i],
-                                    outcome.stats.n[i]))
-            win_err = None
-            if sc.verify_every and (t + 1) % sc.verify_every == 0:
-                win_err = max(w.verify(rtol=sc.verify_rtol,
-                                       atol=sc.verify_atol)
-                              for w in windows)
-            totals = run_state.stack_stats([w.total() for w in windows])
-            beta_k = np.asarray(elm.solve_beta(totals,
-                                               self.cfg.elm_lambda))
-            _bump(telemetry)
-            models = [CNNELMModel(member_params[i], beta_k[i])
-                      for i in range(k)]
-            # 4) the sync policy
-            drifting = [d.drifting for d in detectors]
-            if t == 0 and sc.initial_publish:
-                reason = "initial"
-            elif rc.sync == "drift" and any(drifting):
-                reason = "drift"
-            elif rc.sync == "rounds" and sc.sync_every and \
-                    (t + 1) % sc.sync_every == 0:
-                reason = "cadence"
-            else:
-                reason = None
-            if reason is not None:
-                weights = self._weights(windows)
-                averaged = average_models(models, weights=weights)
+                # 1) prequential score of each member's held-out slice under
+                #    its CURRENT model (pre-training — out-of-sample)
+                hold = min(sc.holdout_rows, min(len(p.x) for p in parts))
+                x_k = np.stack([np.asarray(p.x[:hold]) for p in parts])
+                scores_k = np.asarray(_holdout_scores(
+                    self.cfg,
+                    jax.tree.map(lambda *xs: np.stack(xs),
+                                 *[mm.cnn_params for mm in models]),
+                    np.stack([np.asarray(mm.beta) for mm in models]),
+                    x_k, use_pallas=use_pallas))
                 _bump(telemetry)
-                # members reset to the averaged backbone (the parallel-SGD
-                # sync; a frozen epochs=0 backbone makes this the identity)
-                # — the windowed stats stay member-local: they are each
-                # member's shard memory, and the next chunk's β re-solves
-                # from them
-                member_params = [averaged.cnn_params] * k
-                path = None
-                if checkpoint is not None:
-                    path = run_state.save_round(
-                        checkpoint.dir, t, members=stack_models(models),
-                        stats=totals, averaged=averaged,
-                        meta={**ck_meta, "round": t, "reason": reason,
-                              "final": False})
-                    if checkpoint.after_save is not None:
-                        checkpoint.after_save("round", t, path)
-                event = SyncEvent(
-                    chunk=t, reason=reason,
-                    drifting=[i for i, d in enumerate(drifting) if d],
-                    averaged=averaged, path=path)
-                syncs.append(event)
-                last_published = averaged
-                if sync_hook is not None:
-                    sync_hook(event)
-            records.append(StreamRecord(t, scores, drifting,
-                                        reason is not None, reason, win_err))
-            t += 1
+                scores = [float(np.mean(scores_k[i].argmax(-1) ==
+                                        np.asarray(parts[i].y[:hold])))
+                          for i in range(k)]
+                for d, s in zip(detectors, scores):
+                    d.update(s)
+                # 2) one executor block over the chunk, resumed from each
+                #    member's own params and rng cursor
+                plan = ExecutionPlan(
+                    epochs=m.epochs,
+                    lr_schedule=(None if m.epochs == 0 else
+                                 (lambda e, off=t * m.epochs:
+                                  m.lr_schedule(off + e))),
+                    batch_size=m.batch_size, seed=m.seed,
+                    use_pallas=m.use_pallas, chunk_batches=m.chunk_batches,
+                    rounds=1, telemetry=telemetry,
+                    member_seeds=[m.seed + i for i in range(k)],
+                    start_epochs=[t * draws_per_block] * k,
+                    member_init=member_params if t > 0 else None)
+                outcome = executor.execute(self.cfg, init, parts, plan)
+                member_params = [mm.cnn_params for mm in outcome.members]
+                # 3) window push (+ downdate on evict) and ONE batched
+                #    windowed-β solve over every member's window total
+                for i, w in enumerate(windows):
+                    w.push(elm.ELMStats(outcome.stats.u[i], outcome.stats.v[i],
+                                        outcome.stats.n[i]))
+                win_err = None
+                if sc.verify_every and (t + 1) % sc.verify_every == 0:
+                    win_err = max(w.verify(rtol=sc.verify_rtol,
+                                           atol=sc.verify_atol)
+                                  for w in windows)
+                totals = run_state.stack_stats([w.total() for w in windows])
+                beta_k = np.asarray(elm.solve_beta(totals,
+                                                   self.cfg.elm_lambda))
+                _bump(telemetry)
+                models = [CNNELMModel(member_params[i], beta_k[i])
+                          for i in range(k)]
+                # 4) the sync policy
+                drifting = [d.drifting for d in detectors]
+                if t == 0 and sc.initial_publish:
+                    reason = "initial"
+                elif rc.sync == "drift" and any(drifting):
+                    reason = "drift"
+                elif rc.sync == "rounds" and sc.sync_every and \
+                        (t + 1) % sc.sync_every == 0:
+                    reason = "cadence"
+                else:
+                    reason = None
+                if reason is not None:
+                    weights = self._weights(windows)
+                    averaged = average_models(models, weights=weights)
+                    _bump(telemetry)
+                    # members reset to the averaged backbone (the parallel-SGD
+                    # sync; a frozen epochs=0 backbone makes this the identity)
+                    # — the windowed stats stay member-local: they are each
+                    # member's shard memory, and the next chunk's β re-solves
+                    # from them
+                    member_params = [averaged.cnn_params] * k
+                    path = None
+                    if checkpoint is not None:
+                        path = run_state.save_round(
+                            checkpoint.dir, t, members=stack_models(models),
+                            stats=totals, averaged=averaged,
+                            meta={**ck_meta, "round": t, "reason": reason,
+                                  "final": False})
+                        if checkpoint.after_save is not None:
+                            checkpoint.after_save("round", t, path)
+                    event = SyncEvent(
+                        chunk=t, reason=reason,
+                        drifting=[i for i, d in enumerate(drifting) if d],
+                        averaged=averaged, path=path)
+                    syncs.append(event)
+                    last_published = averaged
+                    if sync_hook is not None:
+                        sync_hook(event)
+                records.append(StreamRecord(t, scores, drifting,
+                                            reason is not None, reason, win_err))
+                t += 1
+        finally:
+            if hasattr(chunk_iter, "close"):
+                chunk_iter.close()      # retires the prefetch thread
         if t == 0:
             raise ValueError("the member streams yielded no chunks")
         averaged = average_models(models, weights=self._weights(windows))

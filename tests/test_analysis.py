@@ -399,6 +399,28 @@ def test_audit_mesh_backend_green():
         assert report.ok, str(report)
 
 
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="mesh audit needs "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_audit_hierarchical_mesh_expects_two_allreduces():
+    """On a ('host','pod') mesh the auditor swaps the sync/reduce check
+    to ``check_two_all_reduces`` — green on the real programs, and the
+    check itself FAILS a one-collective program (so the two-collective
+    bar can't silently pass on the flat lowering)."""
+    mesh = jax.make_mesh((2, 4), ("host", "pod"))
+    reports = hlo.audit_executor(CFG, "mesh", mesh=mesh, k=3)
+    for report in reports:
+        assert report.ok, str(report)
+    # a single-psum program must FAIL the two-collective check
+    flat = jax.make_mesh((8,), ("pod",))
+    from repro.core import executor as ex_mod
+    ex = ex_mod.MeshExecutor(mesh=flat)
+    ex._begin(CFG, 3)
+    params_k = ex._place_params(cnn.init_params(CFG, jax.random.PRNGKey(0)))
+    one = ex_mod._mesh_sync.lower(flat, params_k, ex._weights_dev(None))
+    assert not hlo.check_two_all_reduces(one).ok
+
+
 def test_audit_average_step_plain_green():
     report = hlo.audit_average_step()
     assert report.ok, str(report)

@@ -346,10 +346,8 @@ def test_elastic_validation(parts):
     with pytest.raises(ValueError, match="at least one"):
         ElasticEvent(after_round=0)
     lr = LR
-    with pytest.raises(ValueError, match="mesh"):
-        AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr, batch_size=16,
-                                    backend="mesh"),
-                     ReduceConfig(rounds=2, elastic=sched)).run(parts, KEY)
+    # elastic + mesh is no longer rejected — the mesh executor re-pads
+    # and re-shards per round block (covered in the mesh section below)
     with pytest.raises(ValueError, match="not a living member"):
         AveragingRun(CFG, MapConfig(epochs=2, lr_schedule=lr,
                                     batch_size=16),
@@ -397,7 +395,12 @@ def _elastic_results_bit_equal(ref, res):
     _models_bit_equal(ref.averaged, res.averaged)
 
 
-@pytest.mark.parametrize("backend", ["stacked", "sequential"])
+@pytest.mark.parametrize("backend", [
+    "stacked", "sequential",
+    pytest.param("mesh", marks=pytest.mark.skipif(
+        len(jax.devices()) < 2,
+        reason="elastic mesh resume needs >= 2 devices "
+               "(runs in the CI 8-device fault step)"))])
 def test_elastic_resume_bit_identical(tmp_path, parts, backend):
     """Killed right after elastic round 1's checkpoint — with a joiner
     already admitted and a leaver already retired — the resumed run's
@@ -419,6 +422,54 @@ def test_elastic_resume_bit_identical(tmp_path, parts, backend):
     _models_bit_equal(CNNELMModel(*rp), CNNELMModel(*ep))
     # only round 2 re-executed
     assert [r.round for r in res.rounds] == [2]
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership ON THE MESH backend (ISSUE-9): each round block is a
+# re-stacked mesh execution — _begin(cfg, k) re-pads and re-shards the pod
+# layout at every membership boundary, and the PR-4 pad-and-mask ghosts
+# keep the padding arithmetically invisible
+# ---------------------------------------------------------------------------
+
+_mesh_elastic = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="elastic-on-mesh needs >= 2 devices "
+           "(runs in the CI 8-device fault step)")
+
+
+@_mesh_elastic
+def test_elastic_mesh_churn_matches_stacked(parts):
+    """Join at round 0's boundary, leave at round 1's, on the mesh
+    backend: members, averaged model AND the retired weighted share are
+    bit-equal to the stacked reference. k changes 3 → 4 → 3 across the
+    blocks, so every boundary re-pads to a different pod layout — the
+    churn must still be invisible to the arithmetic."""
+    sched = _churn_sched(parts)
+    ref = _elastic_run(sched, "stacked").run(parts, KEY)
+    res = _elastic_run(sched, "mesh").run(parts, KEY)
+    _elastic_results_bit_equal(ref, res)
+    (rp, rw), = res.group.retired_params
+    (ep, ew), = ref.group.retired_params
+    assert rw == ew
+    _models_bit_equal(CNNELMModel(*rp), CNNELMModel(*ep))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="2-D ('host','pod') elastic mesh needs >= 4 "
+                           "devices (runs in the CI 8-device fault step)")
+def test_elastic_mesh_2d_churn_matches_stacked(parts):
+    """The same churn schedule on a 2-D ('host','pod') mesh — the
+    hierarchical two-collective topology — still reproduces the stacked
+    reference bit-for-bit."""
+    from repro.launch.mesh import make_member_mesh
+    mesh = make_member_mesh(hosts=2)
+    sched = _churn_sched(parts)
+    ref = _elastic_run(sched, "stacked").run(parts, KEY)
+    res = AveragingRun(
+        CFG, MapConfig(epochs=3, lr_schedule=LR, batch_size=16,
+                       backend="mesh", mesh=mesh),
+        ReduceConfig(rounds=3, elastic=sched)).run(parts, KEY)
+    _elastic_results_bit_equal(ref, res)
 
 
 def test_elastic_resume_from_final_rebuilds(tmp_path, parts):

@@ -339,3 +339,150 @@ def test_mesh_unequal_sgd_padded(ds):
     np.testing.assert_allclose(np.asarray(st.averaged.beta),
                                np.asarray(me.averaged.beta),
                                rtol=1e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-level Reduce on the ('host','pod') mesh (ISSUE-9):
+# members shard over BOTH axes, every Reduce/sync is an intra-host psum
+# followed by an inter-host psum — exactly TWO all-reduces — and the
+# result matches the flat one-psum mesh within f32 summation-order
+# tolerance (NOT bit-equal: the two-stage sum re-orders the partials)
+# ---------------------------------------------------------------------------
+
+def _mesh2d(hosts, pods):
+    from repro.launch.mesh import make_member_mesh
+    return make_member_mesh(hosts=hosts, pods=pods)
+
+
+def test_make_member_mesh_host_topologies():
+    """The launch helper builds the 2-D topology and validates it: pods
+    defaults to devices/hosts, non-divisible fleets and pods-without-
+    hosts fail loudly."""
+    m = _mesh2d(2, 4)
+    assert dict(m.shape) == {"host": 2, "pod": 4}
+    assert dict(_mesh2d(2, None).shape) == {"host": 2, "pod": 4}
+    with pytest.raises(ValueError, match="split"):
+        _mesh2d(3, None)
+    with pytest.raises(ValueError, match="hosts"):
+        _mesh2d(None, 4)
+
+
+def test_member_spec_resolves_both_topologies():
+    """DEFAULT_RULES['member'] picks the ('host','pod') tuple candidate
+    on a 2-D mesh and falls back to plain 'pod' on the 1-D mesh."""
+    tree = {"w": jnp.zeros((8, 5))}
+    sh2 = sharding.member_dim_shardings(tree, _mesh2d(2, 4))
+    assert sh2["w"].spec == P(("host", "pod"), None)
+    sh1 = sharding.member_dim_shardings(tree, _mesh(8))
+    assert sh1["w"].spec == P("pod", None)
+
+
+@pytest.mark.parametrize("k,hosts,pods", [(8, 2, 4),  # even, no padding
+                                          (3, 2, 2),  # slots=4 -> pad 1
+                                          (6, 4, 2)])  # slots=8 -> pad 2
+def test_mesh_2d_equals_stacked_elm_only(ds, k, hosts, pods):
+    """epochs=0 on the hierarchical mesh across padding regimes: members
+    bit-exact vs stacked, the two-collective weighted average within f32
+    tolerance — the pad-and-mask ghosts stay invisible to BOTH levels."""
+    parts = partition_iid(ds.x, ds.y, k=k, seed=0)
+    st = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32)).run(parts, KEY)
+    me = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32, backend="mesh",
+                                     mesh=_mesh2d(hosts, pods))
+                      ).run(parts, KEY)
+    assert me.stacked.k == k
+    _members_bit_equal(st.members, me.members)
+    np.testing.assert_allclose(np.asarray(st.averaged.beta),
+                               np.asarray(me.averaged.beta),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mesh_2d_weighted_parity_unequal(ds):
+    """Unequal shards + shard_weighted on a padded 2-D mesh (k=3 over
+    2x2 slots): the hierarchical weighted mean — weight totals riding the
+    same two collectives — matches the host ``weighted_average_trees``
+    reference that the stacked backend computes."""
+    uneq = partition_unequal(ds.x, ds.y, [96, 64, 33], seed=1)
+    st = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32),
+                      ReduceConfig(strategy="shard_weighted")).run(uneq, KEY)
+    me = AveragingRun(CFG, MapConfig(epochs=0, batch_size=32, backend="mesh",
+                                     mesh=_mesh2d(2, 2)),
+                      ReduceConfig(strategy="shard_weighted")).run(uneq, KEY)
+    _members_bit_equal(st.members, me.members)
+    for la, lb in zip(jax.tree.leaves((st.averaged.cnn_params,
+                                       st.averaged.beta)),
+                      jax.tree.leaves((me.averaged.cnn_params,
+                                       me.averaged.beta))):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_mesh_2d_flat_vs_hier_full_run(ds):
+    """The tentpole parity bar: the SAME run on the flat 1-D mesh and the
+    2-D ('host','pod') mesh produces bit-equal MEMBERS (the Map phase is
+    topology-blind) and averaged models within f32 summation-order
+    tolerance — the hierarchical Reduce only re-orders the f32 partial
+    sums, so bit-equality is deliberately NOT claimed."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    parts = partition_iid(ds.x, ds.y, k=8, seed=0)
+    mk = lambda mesh: AveragingRun(
+        cfg, MapConfig(epochs=1, lr_schedule=lr, batch_size=32,
+                       backend="mesh", mesh=mesh), ReduceConfig(rounds=1))
+    flat = mk(_mesh(8)).run(parts, KEY)
+    hier = mk(_mesh2d(2, 4)).run(parts, KEY)
+    _members_bit_equal(flat.members, hier.members)
+    for la, lb in zip(jax.tree.leaves((flat.averaged.cnn_params,
+                                       flat.averaged.beta)),
+                      jax.tree.leaves((hier.averaged.cnn_params,
+                                       hier.averaged.beta))):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_mesh_2d_rounds_parity(ds):
+    """rounds=2 on the hierarchical mesh: the two-collective sync feeds
+    round 1 and the final model still tracks the stacked rounds run."""
+    cfg = replace(CFG, elm_lambda=1.0)
+    lr = dynamic_paper(0.05)
+    parts = partition_iid(ds.x, ds.y, k=4, seed=0)
+    st = AveragingRun(cfg, MapConfig(epochs=2, lr_schedule=lr,
+                                     batch_size=32),
+                      ReduceConfig(rounds=2)).run(parts, KEY)
+    me = AveragingRun(cfg, MapConfig(epochs=2, lr_schedule=lr, batch_size=32,
+                                     backend="mesh", mesh=_mesh2d(2, 2)),
+                      ReduceConfig(rounds=2)).run(parts, KEY)
+    assert st.round_syncs == me.round_syncs == 1
+    np.testing.assert_allclose(np.asarray(st.averaged.beta),
+                               np.asarray(me.averaged.beta),
+                               rtol=1e-4, atol=2e-5)
+
+
+def test_hier_sync_and_reduce_lower_to_two_allreduces():
+    """The acceptance assertion for the hierarchical topology: sync AND
+    Reduce compile to EXACTLY TWO all-reduces (intra-host + inter-host,
+    data-dependent so XLA cannot fuse them), the epoch scan stays
+    collective-free, and the one-call auditor is green on BOTH
+    topologies."""
+    from repro.analysis.hlo import check_two_all_reduces
+    mesh = _mesh2d(2, 4)
+    ex = executor.MeshExecutor(mesh=mesh)
+    ex._begin(CFG, 3)                                     # k_pad = 8
+    params_k = ex._place_params(cnn.init_params(CFG, KEY))
+    w = ex._weights_dev(None)
+
+    sync = executor._mesh_sync.lower(mesh, params_k, w)
+    check = check_two_all_reduces(sync)
+    assert check.ok, check
+
+    beta_k = jax.device_put(
+        jnp.zeros((8, cnn.feature_dim(CFG), CFG.num_classes)),
+        NamedSharding(mesh, P(("host", "pod"))))
+    red = executor._mesh_reduce.lower(mesh, (params_k, beta_k), w)
+    check = check_two_all_reduces(red)
+    assert check.ok, check
+
+    for report in audit_executor(CFG, "mesh", mesh=mesh, k=3):
+        assert report.ok, str(report)
+    # the flat 1-D audit still enforces ONE collective
+    for report in audit_executor(CFG, "mesh", mesh=_mesh(8), k=3):
+        assert report.ok, str(report)

@@ -27,9 +27,9 @@ from repro.models import cnn
 from repro.serve import (BucketedScorer, CheckpointWatcher, EnsembleServer,
                          ServeConfig)
 from repro.stream import (ArraySource, DriftDetector, FileSource,
-                          SlidingWindowStats, StreamConfig, StreamingRun,
-                          SyntheticDriftSource, member_streams,
-                          write_shard_files)
+                          PageHinkleyDetector, SlidingWindowStats,
+                          StreamConfig, StreamingRun, SyntheticDriftSource,
+                          make_detector, member_streams, write_shard_files)
 from repro.stream.window import WindowDriftError
 
 CFG = get_reduced_config("cnn_elm_6c12c")
@@ -177,6 +177,51 @@ def test_detector_validation():
         DriftDetector(warmup=0)
 
 
+def test_page_hinkley_matches_ewma_on_score_collapse():
+    """On an abrupt label-permutation-style score collapse the two
+    detectors agree chunk for chunk: same warmup silence, same drift
+    entry, same level persistence, same recovery disarm — the
+    ``update(score) -> bool`` surface is interchangeable."""
+    trace = [0.9, 0.88, 0.91, 0.9, 0.89, 0.2, 0.25, 0.22, 0.85, 0.9]
+    ewma = DriftDetector(threshold=0.3, warmup=2)
+    ph = make_detector("page_hinkley", threshold=0.3, warmup=2)
+    assert isinstance(ph, PageHinkleyDetector)
+    assert [ewma.update(s) for s in trace] == \
+        [ph.update(s) for s in trace] == \
+        [False, False, False, False, False, True, True, True, False, False]
+    assert ph.history == trace and ph.seen == len(trace)
+
+
+def test_page_hinkley_accumulates_slow_degradation():
+    """The PH differentiator: a slow drip (each step within the EWMA drop
+    threshold) never fires the EWMA detector — its baseline chases the
+    decay — but the cumulative PH statistic crosses ``threshold``."""
+    trace = [0.9] * 3 + [0.9 - 0.05 * i for i in range(1, 11)]
+    ewma = DriftDetector(threshold=0.3, alpha=0.5, warmup=3)
+    ph = PageHinkleyDetector(threshold=0.3, delta=0.005, recovery=0.3,
+                             warmup=3)
+    assert not any(ewma.update(s) for s in trace)
+    assert any(ph.update(s) for s in trace)
+    # frozen statistic while drifting, re-seeded state on recovery
+    frozen = ph.baseline
+    assert ph.update(0.1) and ph.baseline == frozen
+    assert not ph.update(frozen)         # within recovery margin → disarm
+    assert ph.baseline == frozen and ph._cum == ph._cum_min == 0.0
+
+
+def test_page_hinkley_validation():
+    with pytest.raises(ValueError, match="threshold"):
+        PageHinkleyDetector(threshold=0.0)
+    with pytest.raises(ValueError, match="delta"):
+        PageHinkleyDetector(delta=-0.1)
+    with pytest.raises(ValueError, match="recovery"):
+        PageHinkleyDetector(recovery=0.0)
+    with pytest.raises(ValueError, match="warmup"):
+        PageHinkleyDetector(warmup=0)
+    with pytest.raises(ValueError, match="detector"):
+        make_detector("cusum")
+
+
 # ---------------------------------------------------------------------------
 # Sources
 # ---------------------------------------------------------------------------
@@ -312,12 +357,14 @@ def _streams(k=2, seed=0, rows=32, chunks=12):
     return member_streams(src, k, seed=1000)
 
 
-def _run(sync="rounds", sync_every=0, strategy="uniform", **sc_kw):
+def _run(sync="rounds", sync_every=0, strategy="uniform", prefetch=0,
+         **sc_kw):
     sc_kw.setdefault("window_chunks", 3)
     sc_kw.setdefault("holdout_rows", 8)
     return StreamingRun(CFG, MapConfig(epochs=0, batch_size=16),
                         ReduceConfig(sync=sync, strategy=strategy),
-                        StreamConfig(sync_every=sync_every, **sc_kw))
+                        StreamConfig(sync_every=sync_every, **sc_kw),
+                        prefetch=prefetch)
 
 
 def test_windowed_beta_is_exact_over_window():
@@ -383,6 +430,88 @@ def test_drift_policy_end_to_end(tmp_path):
                [drift_syncs[0]]) and drift_syncs[0].drifting
     assert list_steps(str(tmp_path), run_state.ROUND) == res.sync_chunks
     assert [e.chunk for e in events] == res.sync_chunks
+
+
+def test_drift_policy_page_hinkley_parity(tmp_path):
+    """The same label-permutation harness through
+    ``StreamConfig(drift_detector="page_hinkley")``: on an abrupt shift
+    the PH endpoint reproduces the EWMA run exactly — same sync chunks,
+    bit-equal members and published model — because both detectors flag
+    the same chunks (the collapse dwarfs either statistic)."""
+    def harness(**kw):
+        k = 2
+        srcs = [SyntheticDriftSource(n_chunks=9, chunk_rows=32, drift_at=4,
+                                     seed=11 + i, label_shift=5,
+                                     n_per_class=8) for i in range(k)]
+        streams = member_streams(srcs, k, seed=1000, per_member=True)
+        return _run(sync="drift", drift_threshold=0.3, drift_warmup=2,
+                    **kw).run(streams, KEY)
+
+    ewma = harness()
+    ph = harness(drift_detector="page_hinkley")
+    assert ph.sync_chunks == ewma.sync_chunks
+    drift_syncs = [s for s in ph.syncs if s.reason == "drift"]
+    assert drift_syncs and all(s.chunk >= 4 for s in drift_syncs)
+    for a, b in zip(ewma.members, ph.members):
+        np.testing.assert_array_equal(np.asarray(a.beta),
+                                      np.asarray(b.beta))
+    np.testing.assert_array_equal(np.asarray(ewma.last_published.beta),
+                                  np.asarray(ph.last_published.beta))
+    with pytest.raises(ValueError, match="detector"):
+        _run(drift_detector="cusum")
+
+
+# ---------------------------------------------------------------------------
+# Async ingestion prefetch (ISSUE-9 satellite): bounded-queue background
+# reader — identical numerics, only WHEN the sources are read moves
+# ---------------------------------------------------------------------------
+
+def test_prefetch_bit_identical():
+    """prefetch=3 vs the synchronous pull: same chunk count, same sync
+    chunks, bit-equal members and published model — the background thread
+    must not change WHAT is read, only when."""
+    ref = _run(sync_every=2).run(_streams(), KEY)
+    pre = _run(sync_every=2, prefetch=3).run(_streams(), KEY)
+    assert pre.chunks == ref.chunks
+    assert pre.sync_chunks == ref.sync_chunks
+    for a, b in zip(ref.members, pre.members):
+        np.testing.assert_array_equal(np.asarray(a.beta),
+                                      np.asarray(b.beta))
+    np.testing.assert_array_equal(np.asarray(ref.last_published.beta),
+                                  np.asarray(pre.last_published.beta))
+
+
+def test_prefetch_error_propagates_and_validates():
+    """A source blowing up mid-stream surfaces the ORIGINAL exception at
+    the consuming chunk loop even when it fired on the prefetch thread;
+    negative depths are rejected up front."""
+    def poisoned(it, n):
+        for i, v in enumerate(it):
+            if i == n:
+                raise RuntimeError("stream source died")
+            yield v
+
+    streams = [poisoned(s, 2) for s in _streams()]
+    with pytest.raises(RuntimeError, match="stream source died"):
+        _run(prefetch=2).run(streams, KEY)
+    with pytest.raises(ValueError, match="prefetch"):
+        _run(prefetch=-1)
+
+
+def test_prefetch_thread_retires_on_early_stop():
+    """max_chunks stops the consumer before the producer drains; the
+    prefetch thread must be told to stop (joinable, no leak) instead of
+    blocking forever on a full queue."""
+    import threading
+    before = {t.name for t in threading.enumerate()}
+    res = _run(max_chunks=2, prefetch=1).run(_streams(), KEY)
+    assert res.chunks == 2
+    leaked = [t for t in threading.enumerate()
+              if t.name.startswith("repro-stream-prefetch")
+              and t.name not in before]
+    for t in leaked:
+        t.join(timeout=5.0)
+        assert not t.is_alive(), "prefetch thread leaked past run()"
 
 
 def test_watcher_hot_reloads_irregular_rounds(tmp_path):
