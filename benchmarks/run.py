@@ -11,11 +11,12 @@ def main() -> None:
     failures = []
     from benchmarks import (e2lm_scaling, elastic_resume, fig7_iterations,
                             hierarchical_reduce, kernel_bench, map_phase,
-                            roofline, serve_ensemble, stream_map,
-                            table23_notmnist, table45_mnist)
+                            reduce_strategies, roofline, serve_ensemble,
+                            stream_map, table23_notmnist, table45_mnist)
     for mod in (kernel_bench, e2lm_scaling, map_phase, hierarchical_reduce,
-                elastic_resume, serve_ensemble, stream_map, table45_mnist,
-                table23_notmnist, fig7_iterations, roofline):
+                reduce_strategies, elastic_resume, serve_ensemble,
+                stream_map, table45_mnist, table23_notmnist,
+                fig7_iterations, roofline):
         try:
             mod.main()
         except Exception as e:  # keep the suite going; report at the end

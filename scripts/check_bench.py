@@ -168,6 +168,23 @@ SCHEMAS = {
                    "acc_tol": NUM},
         "cost_model": str, "backend": str,
     },
+    "BENCH_reduce_strategies": {
+        "k": int, "alphas": [NUM], "epochs": int, "rounds": int,
+        "batch_size": int, "strategies": [str],
+        "sweep": [{"strategy": str, "alpha": NUM, "acc": NUM}],
+        "partitions": [{"alpha": NUM, "rows_per_member": [int],
+                        "label_skew_tv": NUM}],
+        "boosted_gate": {"alpha": NUM, "boosted_acc": NUM,
+                         "uniform_acc": NUM},
+        "registry_bit_identical": bool,
+        "gossip": {"rounds": int, "rounds_sweep": [int],
+                   "consensus_gaps": [NUM], "mixing_lambda2": NUM,
+                   "ppermute_per_sync": int, "allreduce_per_sync": int,
+                   "gossip_per_chip_bytes": NUM,
+                   "psum_per_chip_bytes": NUM,
+                   "gossip_sync_us": NUM, "psum_sync_us": NUM},
+        "cost_model": str, "backend": str,
+    },
 }
 
 
@@ -224,6 +241,31 @@ INVARIANTS = {
         ("every topology covers the same device fleet",
          lambda d: all(t["hosts"] * t["pods"] == d["devices"]
                        for t in d["topologies"])),
+    ],
+    "BENCH_reduce_strategies": [
+        ("boosted beats or ties uniform on the most-skewed split",
+         lambda d: d["boosted_gate"]["boosted_acc"] >=
+         d["boosted_gate"]["uniform_acc"]),
+        ("registry string vs instance resolution is bit-identical",
+         lambda d: d["registry_bit_identical"]),
+        ("gossip consensus gap shrinks monotonically in mixing rounds",
+         lambda d: all(a > b for a, b in
+                       zip(d["gossip"]["consensus_gaps"],
+                           d["gossip"]["consensus_gaps"][1:]))),
+        ("gossip sync is psum-free: 2 permutes per round, zero "
+         "all-reduces",
+         lambda d: d["gossip"]["allreduce_per_sync"] == 0 and
+         d["gossip"]["ppermute_per_sync"] == 2 * d["gossip"]["rounds"]),
+        ("every registered strategy appears at every alpha",
+         lambda d: {(r["strategy"], r["alpha"]) for r in d["sweep"]} ==
+         {(s, a) for s in d["strategies"] for a in d["alphas"]}),
+        ("label skew grows as alpha shrinks",
+         lambda d: all(
+             a["label_skew_tv"] < b["label_skew_tv"]
+             for a, b in zip(sorted(d["partitions"],
+                                    key=lambda r: -r["alpha"]),
+                             sorted(d["partitions"],
+                                    key=lambda r: -r["alpha"])[1:]))),
     ],
     "BENCH_stream_map": [
         ("drift-triggered sync beats never-sync on the post-drift "

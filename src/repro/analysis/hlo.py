@@ -153,6 +153,23 @@ def check_no_collectives(program, *,
     return check_collectives(program, expect={}, name=name)
 
 
+def ppermute_count(program) -> int:
+    """Number of ``collective-permute`` ops (``lax.ppermute`` neighbor
+    exchanges) in the compiled module — the gossip ring's currency."""
+    return collective_counts(program).get("collective-permute", 0)
+
+
+def check_gossip_sync(program, *, rounds: int,
+                      name: str = "gossip-ring") -> Check:
+    """The gossip-sync collective budget: EXACTLY ``2·rounds``
+    collective-permutes (each unrolled mixing round is one right-shift +
+    one left-shift neighbor exchange) and — because the expectation is an
+    equality over ALL collective kinds — ZERO all-reduces: the
+    decentralized sync never touches a global collective."""
+    return check_collectives(
+        program, expect={"collective-permute": 2 * rounds}, name=name)
+
+
 def check_donation(program, *, min_aliases: int = 1,
                    name: str = "donation-aliased") -> Check:
     """The module header must carry ≥ ``min_aliases`` input→output
@@ -218,7 +235,8 @@ def _tiny_inputs(cfg, k: int, batch_size: int, num_batches: int):
 
 def audit_executor(cfg, backend: str, *, mesh=None, k: int = 4,
                    batch_size: int = 8, num_batches: int = 2,
-                   key=None) -> List[AuditReport]:
+                   key=None, gossip_rounds: Optional[int] = None
+                   ) -> List[AuditReport]:
     """Lower the named backend's actual programs and run its contract
     set. Returns one ``AuditReport`` per audited program; none raises —
     assert ``all(r.ok for r in reports)`` or call ``raise_if_failed()``.
@@ -233,7 +251,10 @@ def audit_executor(cfg, backend: str, *, mesh=None, k: int = 4,
       budget (ONE all-reduce on a flat 1-D member mesh, TWO on the
       hierarchical ``('host', 'pod')`` mesh) + f32 contracts, and the
       ``_mesh_epoch`` zero-collective + donation contracts, on a real
-      (or forced-host) device mesh.
+      (or forced-host) device mesh. With ``gossip_rounds=T`` the mesh
+      audit ALSO lowers the decentralized ``_mesh_gossip_sync`` and pins
+      its ring budget: exactly ``2·T`` collective-permutes and zero
+      global all-reduces (``check_gossip_sync``).
     """
     from repro.core import elm, executor
     from repro.models import cnn
@@ -321,6 +342,15 @@ def audit_executor(cfg, backend: str, *, mesh=None, k: int = 4,
         rep = AuditReport("mesh/_mesh_epoch")
         rep.checks += [check_no_collectives(ep), check_donation(ep)]
         reports.append(rep)
+
+        if gossip_rounds is not None:
+            ex._check_gossip()      # hierarchical meshes have no ring
+            gs = executor._mesh_gossip_sync.lower(mesh, params_k, w,
+                                                  rounds=gossip_rounds)
+            rep = AuditReport("mesh/_mesh_gossip_sync")
+            rep.checks += [check_gossip_sync(gs, rounds=gossip_rounds),
+                           check_accum_dtype(gs)]
+            reports.append(rep)
         return reports
 
     raise ValueError(f"backend must be one of ('sequential', 'stacked', "

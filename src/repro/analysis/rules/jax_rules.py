@@ -268,5 +268,31 @@ def bare_jit_in_serve(ctx):
                    "compile_count()/assert_compile_budget() see it")
 
 
+@rule("unregistered-reduce-strategy",
+      "`strategy=<string>` must name a registered ReduceStrategy — an "
+      "unregistered literal fails at ReduceConfig construction, and the "
+      "registry (not a frozen tuple) is the single source of truth")
+def unregistered_reduce_strategy(ctx):
+    # reduce_strategies is deliberately numpy-only, so importing it keeps
+    # the lint path jax-free; resolve lazily so a broken registry cannot
+    # take down every other rule.
+    from repro.core.reduce_strategies import registry_keys
+    keys = registry_keys()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "strategy":
+                continue
+            if isinstance(kw.value, ast.Constant) and \
+                    isinstance(kw.value.value, str) and \
+                    kw.value.value not in keys:
+                yield (kw.value.lineno, kw.value.col_offset,
+                       f"strategy={kw.value.value!r} is not a registered "
+                       f"reduce strategy — registry keys are "
+                       f"{', '.join(keys)} (register(...) a new one or "
+                       f"fix the literal)")
+
+
 # keep the module importable standalone for the docs generator
 __all__ = [n for n in dir() if not n.startswith("_")]

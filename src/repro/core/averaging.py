@@ -19,6 +19,16 @@ Five deployment flavours:
                             psum then one inter-host psum, so the sync
                             compiles to exactly TWO collectives regardless
                             of global fleet size.
+
+Plus the DECENTRALIZED flavour behind ``ReduceConfig(strategy="gossip")``
+(arXiv:1504.00981 — no fusion center, no global collective at all):
+* ``gossip_member_dim``   — ring-neighbor consensus over the leading
+                            member dim (the single-device emulation:
+                            ``jnp.roll`` is the ring).
+* ``gossip_ring_mix``     — the in-SPMD mixing loop over a named mesh
+                            axis: each round is two ``lax.ppermute``
+                            neighbor exchanges, zero all-reduces — the
+                            MeshExecutor's gossip sync rides this.
 """
 from __future__ import annotations
 
@@ -134,3 +144,102 @@ def hierarchical_psum_weighted_mean_members(tree, local_weights,
     parts, wsum = unravel(flat)
     return jax.tree.map(lambda s, ref: (s / wsum).astype(ref.dtype),
                         parts, tree)
+
+
+# ---------------------------------------------------------------------------
+# Gossip (decentralized ring consensus — arXiv:1504.00981)
+# ---------------------------------------------------------------------------
+#
+# The consensus state each node n carries is the PAIR
+# (num_n, den_n) = (w_n · x_n, w_n) — weighted numerator and weight mass.
+# One mixing round applies the doubly-stochastic 3-point ring stencil
+#     s_n <- (s_n + s_{n-1} + s_{n+1}) / 3
+# to both. After T rounds node n's ESTIMATE is num_n/den_n; because the
+# stencil is doubly stochastic the across-node SUMS of num and den are
+# mixing-invariant, so the ratio of sums is the exact global weighted
+# mean — that is the published readout, while each node's own iterate
+# approaches it geometrically at the mixing matrix's second eigenvalue
+# |λ₂| = max_{j≠0} |1 + 2·cos(2πj/p)| / 3 (p ring nodes).
+
+_GOSSIP_EPS = 1e-30     # guards 0/0 on nodes the mixing has not reached
+
+
+def gossip_mixing_lambda2(p: int) -> float:
+    """|λ₂| of the 3-point ring stencil over ``p`` nodes — the geometric
+    consensus rate the convergence gate checks against."""
+    if p <= 1:
+        return 0.0
+    j = jnp.arange(1, p)
+    return float(jnp.max(jnp.abs(1.0 + 2.0 * jnp.cos(2.0 * jnp.pi * j / p))
+                         ) / 3.0)
+
+
+def gossip_member_dim(stacked_params, weights, rounds: int):
+    """Ring gossip over the leading member dim — the single-device
+    emulation of the mesh ring (``jnp.roll`` along the member axis plays
+    ``lax.ppermute``; node = member here, node = pod on the mesh).
+
+    Returns ``(iterates, published)``: ``iterates`` keeps the member-dim
+    layout, member i reset to ITS OWN consensus estimate after ``rounds``
+    mixing rounds (the decentralized sync — members do NOT collapse to
+    one shared row); ``published`` is the invariant-sum readout
+    ``sum(num)/sum(den)`` with the member dim reduced away — the single
+    model an operator polls out of the fleet. ``weights=None`` gossips
+    the uniform mean. Accumulation is f32 throughout (the averaging
+    contract)."""
+    if rounds < 1:
+        raise ValueError(f"gossip needs rounds >= 1, got {rounds}")
+    k = jax.tree.leaves(stacked_params)[0].shape[0]
+    w = (jnp.ones((k,), jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+
+    def scale(a):
+        return a.astype(jnp.float32) * w.reshape((k,) + (1,) * (a.ndim - 1))
+
+    num = jax.tree.map(scale, stacked_params)
+    den = w
+
+    def mix(a):
+        return (a + jnp.roll(a, 1, axis=0) + jnp.roll(a, -1, axis=0)) / 3.0
+
+    for _ in range(rounds):
+        num, den = jax.tree.map(mix, num), mix(den)
+    d = jnp.maximum(den, _GOSSIP_EPS)
+    iterates = jax.tree.map(
+        lambda s, ref: (s / d.reshape((k,) + (1,) * (s.ndim - 1))
+                        ).astype(ref.dtype), num, stacked_params)
+    published = jax.tree.map(
+        lambda s, ref: (jnp.sum(s, axis=0) / jnp.sum(den)).astype(ref.dtype),
+        num, stacked_params)
+    return iterates, published
+
+
+def gossip_ring_mix(tree, local_weights, axis_name: str, rounds: int,
+                    ring_size: int):
+    """The in-SPMD mixing loop: call inside shard_map with the member dim
+    sharded over ``axis_name`` (one ring node per device; this device's
+    members pre-aggregate into its local weighted partial). Each of the
+    ``rounds`` mixing rounds is exactly TWO ``lax.ppermute`` neighbor
+    exchanges (right ring shift + left ring shift) on the flat consensus
+    vector — the loop is unrolled so the compiled HLO carries literally
+    ``2·rounds`` collective-permutes and ZERO all-reduces
+    (``analysis.hlo.check_gossip_sync`` counts them).
+
+    ``ring_size`` is the static size of ``axis_name`` (the permutation
+    tables are built at trace time — nothing global is queried on
+    device). Returns ``(num, den)``: this node's post-mixing f32
+    numerator tree and scalar weight mass. Divide for the node's
+    estimate; psum-free."""
+    p = int(ring_size)  # repro: allow(host-concretization) — static ring size
+    fwd = [(i, (i + 1) % p) for i in range(p)]
+    bwd = [(i, (i - 1) % p) for i in range(p)]
+    num = jax.tree.map(
+        lambda a: jnp.tensordot(local_weights.astype(jnp.float32),
+                                a.astype(jnp.float32), axes=1), tree)
+    flat, unravel = ravel_pytree((num, jnp.sum(local_weights,
+                                               dtype=jnp.float32)))
+    for _ in range(rounds):
+        left = jax.lax.ppermute(flat, axis_name, fwd)
+        right = jax.lax.ppermute(flat, axis_name, bwd)
+        flat = (flat + left + right) / 3.0
+    return unravel(flat)

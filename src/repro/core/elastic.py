@@ -10,7 +10,17 @@ makes both operations natural, and this module makes them first-class:
 * ``leave``  — a departing member contributes its weights to one final
   weighted average and its accumulated (U, V) permanently (no un-learning
   needed: the head solve is stateless given the stats).
-* ``reduce`` — shard-size-weighted weight average + exact stats merge.
+* ``reduce`` — cumulative-work-weighted weight average + exact stats
+  merge.
+
+The per-block work each ``record_step`` accumulates comes from the
+runner's ``ReduceConfig.strategy`` — any ``elastic_ok`` entry of the
+``repro.core.reduce_strategies`` registry: ``uniform`` adds 1 per block
+survived, ``shard_weighted`` the rows the block processed, ``boosted``
+the block output's validation-quality alpha — so a leaver's retained
+contribution carries exactly the strategy's weights through every later
+average. Fixed-length weight vectors (``ExplicitWeights``) and ring
+topologies (``gossip``) have no churn story and are rejected upstream.
 """
 from __future__ import annotations
 

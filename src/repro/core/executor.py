@@ -72,6 +72,7 @@ except ImportError:                # jax 0.4.x
 from repro.checkpoint import run_state
 from repro.core import elm
 from repro.core.averaging import (average_member_dim, broadcast_member_dim,
+                                  gossip_member_dim, gossip_ring_mix,
                                   hierarchical_psum_weighted_mean_members,
                                   psum_weighted_mean_members)
 from repro.core.cnn_elm import (CNNELMModel, StackedMembers, _bump,
@@ -138,6 +139,21 @@ class ExecutionPlan:
     trees) instead of broadcasting the shared ``init_params`` — the
     streaming runner's block-continuation contract (members diverge
     between syncs); backends ``sequential`` and ``stacked`` only.
+
+    Reduce-strategy fields (``repro.core.reduce_strategies``):
+    ``weight_fn(r, snapshot, val_errors)`` resolves the round's member
+    weights LAZILY from trained state — ``snapshot``/``val_errors`` are
+    the round's cached closures (``val_errors()`` scores ``validation``,
+    an (x, y) held-out slice, with the backend-native program: host
+    stacked scorer or the in-mesh shard_map — and returns the (k,)
+    misclassification rates). When ``weight_fn`` is None the static
+    ``reduce_weights`` apply, bit-identical to the pre-registry path.
+    ``gossip_rounds`` switches the COMBINE: every sync and ``averaged()``
+    runs the decentralized ring-consensus program instead of the global
+    weighted mean — members keep their own consensus iterates between
+    rounds (so per-round checkpointing, whose resume contract assumes
+    one shared post-sync row, is rejected), and the published model is
+    the mixing-invariant ratio-of-sums readout.
     """
     epochs: int = 0
     lr_schedule: Optional[Callable[[int], float]] = None
@@ -155,6 +171,9 @@ class ExecutionPlan:
     member_seeds: Optional[Sequence[int]] = None
     start_epochs: Optional[Sequence[int]] = None
     member_init: Optional[Sequence] = None
+    weight_fn: Optional[Callable] = None
+    validation: Optional[tuple] = None      # (x, y) held-out slice
+    gossip_rounds: Optional[int] = None
 
 
 @dataclass
@@ -246,6 +265,11 @@ class SequentialExecutor:
                 "start_round resume is a stacked-layout contract; the "
                 "sequential backend resumes via plan.completed member "
                 "checkpoints")
+        if plan.gossip_rounds is not None:
+            raise ValueError(
+                "the gossip combine mixes a member/pod ring — the "
+                "sequential reference has no stacked member dim to mix "
+                "over; use backend='stacked' or 'mesh'")
         k = len(partitions)
         seeds = _member_seeds(plan, k)
         burns = _stream_burns(plan, k, 0)
@@ -286,10 +310,40 @@ class SequentialExecutor:
                 cache["sm"] = stack_models(members)
             return cache["sm"]
 
+        def val_errors():
+            # the sequential boosted path scores through the SAME stacked
+            # program as the fast backends (eval only — training stays
+            # the faithful host loop), so the weights agree bit-for-bit
+            if "err" not in cache:
+                if plan.validation is None:
+                    raise ValueError(
+                        "per-member validation errors need a held-out "
+                        "slice — set plan.validation (the runner wires "
+                        "ReduceConfig.validation through)")
+                xv, yv = plan.validation
+                sm = snapshot()
+                up = resolve_use_pallas(plan.use_pallas)
+                preds = []
+                for j in range(0, len(xv), _VAL_BATCH):
+                    preds.append(np.asarray(_member_predictions(
+                        cfg, sm.cnn_params, sm.beta,
+                        jnp.asarray(xv[j:j + _VAL_BATCH]),
+                        use_pallas=up)))
+                    _bump(plan.telemetry)
+                cache["err"] = _val_error_rates(
+                    np.concatenate(preds, axis=1), yv)
+            return cache["err"]
+
+        def weights():
+            if "w" not in cache:
+                cache["w"] = (plan.weight_fn(0, snapshot, val_errors)
+                              if plan.weight_fn is not None
+                              else plan.reduce_weights)
+            return cache["w"]
+
         def averaged():
             if "avg" not in cache:
-                cache["avg"] = average_models(members,
-                                              weights=plan.reduce_weights)
+                cache["avg"] = average_models(members, weights=weights())
             return cache["avg"]
 
         if ck is not None:
@@ -317,6 +371,46 @@ def _round_sync(params_k, weights):
     k = jax.tree.leaves(params_k)[0].shape[0]
     return broadcast_member_dim(
         average_member_dim(params_k, weights=weights), k)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def _gossip_round_sync(params_k, weights, *, rounds: int):
+    """The single-device GOSSIP sync: ring mixing over the member dim,
+    every member reset to its OWN consensus iterate (not one broadcast
+    row — the decentralized regime)."""
+    return gossip_member_dim(params_k, weights, rounds)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def _gossip_reduce(tree, weights, *, rounds: int):
+    """The single-device gossip Reduce: the published ratio-of-sums
+    readout after ``rounds`` mixing rounds (exact weighted mean up to
+    f32 summation order — the mixing stencil is sum-invariant)."""
+    return gossip_member_dim(tree, weights, rounds)[1]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def _member_predictions(cfg, cnn_params_k, beta_k, x, *,
+                        use_pallas: Optional[bool]):
+    """(k, n) argmax labels of ONE validation batch under every member —
+    the boosted strategy's scoring program on the host-stacked layouts
+    (one vmap dispatch; the error-rate mean happens on the host in f64
+    so the weights agree bit-for-bit across backends)."""
+    def one(p, b):
+        h = cnn.features(cfg, p, x, use_pallas=use_pallas)
+        return jnp.argmax(elm.predict(h, b), axis=-1)
+
+    return jax.vmap(one)(cnn_params_k, beta_k)
+
+
+def _val_error_rates(preds_k: np.ndarray, yv) -> np.ndarray:
+    """(k,) misclassification rates from (k, n) member predictions —
+    float64 host math, shared by all three backends."""
+    return np.asarray(
+        preds_k != np.asarray(yv)[None, :], np.float64).mean(axis=1)
+
+
+_VAL_BATCH = 512       # validation slices score in bounded device batches
 
 
 class _StackedBase:
@@ -361,6 +455,17 @@ class _StackedBase:
         use_pallas = resolve_use_pallas(plan.use_pallas)
         telemetry = plan.telemetry
         self._begin(cfg, k)
+        if plan.gossip_rounds is not None:
+            if plan.gossip_rounds < 1:
+                raise ValueError(f"gossip_rounds must be >= 1, "
+                                 f"got {plan.gossip_rounds}")
+            if plan.checkpoint is not None:
+                raise ValueError(
+                    "gossip syncs leave each member on its OWN consensus "
+                    "iterate; the per-round checkpoint/resume contract "
+                    "assumes one shared post-sync row — run gossip "
+                    "without checkpointing")
+            self._check_gossip()
         per_round = plan.epochs // plan.rounds
         # live per-member streams: each epoch's builder call draws the next
         # permutation (mirrors train_member's stream, no epoch replay);
@@ -405,12 +510,13 @@ class _StackedBase:
                         solve_each_batch, use_pallas, masked)
                     _bump(telemetry)
             last = r == len(round_passes) - 1
-            snapshot, averaged = self._round_closures(
-                cfg, params_k, stats_k, plan.reduce_weights, telemetry)
+            snapshot, averaged, weights = self._round_closures(
+                cfg, params_k, stats_k, plan, r, use_pallas, telemetry)
             if last:
                 sm = snapshot()
             else:
-                params_k = self._sync(params_k, plan.reduce_weights)
+                params_k = self._sync(params_k, weights(),
+                                      gossip_rounds=plan.gossip_rounds)
                 # the sync is a device dispatch too — counted toward the
                 # total AND tallied separately, before on_round closes this
                 # round's books, so per-round telemetry prices its own sync
@@ -438,10 +544,16 @@ class _StackedBase:
                 plan.on_round(r, snapshot, averaged)
         return MapOutcome(sm.unstack(), sm, self._host_stats(stats_k))
 
-    def _round_closures(self, cfg, params_k, stats_k, weights, telemetry):
-        """Lazy, cached snapshot/averaged over THIS round's pre-sync state.
-        The β solve is shared between them and only runs if somebody asks
-        (the final round always; intermediate rounds only under a hook)."""
+    def _round_closures(self, cfg, params_k, stats_k, plan, r, use_pallas,
+                        telemetry):
+        """Lazy, cached snapshot/averaged/weights over THIS round's
+        pre-sync state. The β solve is shared between them and only runs
+        if somebody asks (the final round always; intermediate rounds
+        only under a hook). ``weights()`` resolves the round's member
+        weights: the static ``plan.reduce_weights``, or — under a
+        ``plan.weight_fn`` strategy (boosted) — from the round's trained
+        members, with ``val_errors()`` scoring ``plan.validation`` via
+        the backend-native program, all at most once per round."""
         cache: dict = {}
 
         def solved_beta():
@@ -455,13 +567,33 @@ class _StackedBase:
                 cache["sm"] = self._snapshot(params_k, solved_beta())
             return cache["sm"]
 
+        def val_errors():
+            if "err" not in cache:
+                if plan.validation is None:
+                    raise ValueError(
+                        "per-member validation errors need a held-out "
+                        "slice — set plan.validation (the runner wires "
+                        "ReduceConfig.validation through)")
+                cache["err"] = self._val_errors(
+                    cfg, params_k, solved_beta(), plan.validation,
+                    use_pallas, telemetry)
+            return cache["err"]
+
+        def weights():
+            if "w" not in cache:
+                cache["w"] = (plan.weight_fn(r, snapshot, val_errors)
+                              if plan.weight_fn is not None
+                              else plan.reduce_weights)
+            return cache["w"]
+
         def averaged():
             if "avg" not in cache:
-                cache["avg"] = self._averaged(params_k, solved_beta(),
-                                              weights, telemetry)
+                cache["avg"] = self._averaged(
+                    params_k, solved_beta(), weights(), telemetry,
+                    gossip_rounds=plan.gossip_rounds)
             return cache["avg"]
 
-        return snapshot, averaged
+        return snapshot, averaged, weights
 
     # ---- shared host-side epoch building --------------------------------
 
@@ -489,6 +621,17 @@ class _StackedBase:
 
     def _begin(self, cfg, k):
         """Per-run setup (member counts, mesh checks)."""
+
+    def _check_gossip(self):
+        """Veto hook for the gossip combine (mesh topologies without a
+        single ring axis reject it)."""
+
+    def _val_errors(self, cfg, params_k, beta_k, validation, use_pallas,
+                    telemetry) -> np.ndarray:
+        """(k,) per-member misclassification rates on the held-out
+        ``validation=(x, y)`` slice — backend-native scoring (argmax on
+        device, f64 error mean on host), padding stripped."""
+        raise NotImplementedError
 
     def _place_member_params(self, inits):
         raise ValueError(
@@ -563,15 +706,35 @@ class StackedExecutor(_StackedBase):
     def _snapshot(self, params_k, beta_k):
         return StackedMembers(params_k, beta_k)
 
-    def _averaged(self, params_k, beta_k, weights, telemetry):
-        avg_cnn, avg_beta = average_member_dim((params_k, beta_k),
-                                               weights=weights)
+    def _averaged(self, params_k, beta_k, weights, telemetry,
+                  gossip_rounds=None):
+        if gossip_rounds is not None:
+            avg_cnn, avg_beta = _gossip_reduce(
+                (params_k, beta_k),
+                None if weights is None else jnp.asarray(weights,
+                                                         jnp.float32),
+                rounds=gossip_rounds)
+        else:
+            avg_cnn, avg_beta = average_member_dim((params_k, beta_k),
+                                                   weights=weights)
         return CNNELMModel(avg_cnn, avg_beta)
 
-    def _sync(self, params_k, weights):
-        params_k = _round_sync(
-            params_k,
-            None if weights is None else jnp.asarray(weights, jnp.float32))
+    def _val_errors(self, cfg, params_k, beta_k, validation, use_pallas,
+                    telemetry) -> np.ndarray:
+        xv, yv = validation
+        preds = []
+        for i in range(0, len(xv), _VAL_BATCH):
+            preds.append(np.asarray(_member_predictions(
+                cfg, params_k, beta_k, jnp.asarray(xv[i:i + _VAL_BATCH]),
+                use_pallas=use_pallas)))
+            _bump(telemetry)
+        return _val_error_rates(np.concatenate(preds, axis=1), yv)
+
+    def _sync(self, params_k, weights, gossip_rounds=None):
+        w = None if weights is None else jnp.asarray(weights, jnp.float32)
+        params_k = (_gossip_round_sync(params_k, w, rounds=gossip_rounds)
+                    if gossip_rounds is not None
+                    else _round_sync(params_k, w))
         if self.mesh is not None:
             params_k = jax.device_put(
                 params_k, sharding.member_dim_shardings(params_k, self.mesh))
@@ -693,6 +856,79 @@ def _mesh_sync(mesh, params_k, weights):
                      out_specs=pspecs)(params_k, weights)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "use_pallas"))
+def _mesh_val_predict(cfg, mesh, params_k, beta_k, x, *,
+                      use_pallas: Optional[bool]):
+    """The boosted strategy's IN-MESH scoring program: each pod scores
+    the replicated validation batch under only its local members (the
+    same vmap body as ``_member_predictions``, shard_map-ed over the
+    member axes) — k/p-parallel, ZERO collectives; the resulting (k,)
+    error vector then rides the existing one-psum/two-psum Reduce as its
+    weight vector."""
+    pspecs = _member_specs(params_k, mesh)
+    entry = _member_axis_entry(mesh)
+
+    def local(p, b, xv):
+        def one(pp, bb):
+            h = cnn.features(cfg, pp, xv, use_pallas=use_pallas)
+            return jnp.argmax(elm.predict(h, bb), axis=-1)
+
+        return jax.vmap(one)(p, b)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspecs, P(entry, None, None),
+                               P(*([None] * x.ndim))),
+                     out_specs=P(entry, None))(params_k, beta_k, x)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "rounds"))
+def _mesh_gossip_sync(mesh, params_k, weights, *, rounds: int):
+    """The GOSSIP inter-round sync: ring-neighbor consensus on the flat
+    'pod' axis — each pod pre-aggregates its local members into one ring
+    node, mixes with its two neighbors for ``rounds`` unrolled mixing
+    rounds (two ``lax.ppermute`` collectives each, ZERO all-reduces —
+    ``analysis.hlo.check_gossip_sync`` pins the budget), then resets its
+    local member slots to its OWN consensus estimate. Members on
+    different pods genuinely diverge between rounds — the decentralized
+    regime, vs ``_mesh_sync``'s global broadcast."""
+    pspecs = _member_specs(params_k, mesh)
+    p = mesh.shape["pod"]
+
+    def local(prm, w):
+        num, den = gossip_ring_mix(prm, w, "pod", rounds, p)
+        ref = jax.tree.map(lambda a: a[0], prm)
+        est = jax.tree.map(
+            lambda s, t: (s / jnp.maximum(den, 1e-30)).astype(t.dtype),
+            num, ref)
+        k_local = jax.tree.leaves(prm)[0].shape[0]
+        return broadcast_member_dim(est, k_local)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(pspecs, P("pod")),
+                     out_specs=pspecs)(params_k, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "rounds"))
+def _mesh_gossip_state(mesh, tree, weights, *, rounds: int):
+    """Every pod's raw consensus state after ``rounds`` mixing rounds:
+    the (p, ...)-stacked f32 numerator trees and (p,) weight masses,
+    gathered off-mesh with NO global collective (the out-spec
+    concatenates per-pod shards). The host divides per pod for the
+    consensus iterates (the convergence gate's subject) and reads
+    ``sum(num)/sum(den)`` for the published model — sums the mixing
+    stencil leaves invariant."""
+    def local(t, w):
+        num, den = gossip_ring_mix(t, w, "pod", rounds,
+                                   mesh.shape["pod"])
+        return jax.tree.map(lambda a: a[None], num), den[None]
+
+    num_specs = jax.tree.map(
+        lambda a: P(*(("pod",) + (None,) * (a.ndim - 1))), tree)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(_member_specs(tree, mesh), P("pod")),
+                     out_specs=(num_specs, P("pod")))(tree, weights)
+
+
 @functools.partial(jax.jit, static_argnames=("mesh", "lam"))
 def _mesh_e2lm_beta(mesh, stats_k, lam):
     """E²LM cross-member Reduce (``e2lm.psum_stats``): sum every member's
@@ -805,15 +1041,51 @@ class MeshExecutor(_StackedBase):
     def _host_stats(self, stats_k) -> elm.ELMStats:
         return elm.ELMStats(*(np.asarray(a)[:self._k] for a in stats_k))
 
-    def _averaged(self, params_k, beta_k, weights, telemetry):
+    def _check_gossip(self):
+        if "host" in self.mesh.shape:
+            raise ValueError(
+                "gossip rides the flat 1-D 'pod' ring — the hierarchical "
+                "('host', 'pod') mesh has no single ring axis; build the "
+                "flat member mesh (make_member_mesh()) for gossip syncs")
+
+    def _val_errors(self, cfg, params_k, beta_k, validation, use_pallas,
+                    telemetry) -> np.ndarray:
+        xv, yv = validation
+        preds = []
+        for i in range(0, len(xv), _VAL_BATCH):
+            preds.append(np.asarray(_mesh_val_predict(
+                cfg, self.mesh, params_k, beta_k,
+                jnp.asarray(xv[i:i + _VAL_BATCH]), use_pallas=use_pallas)))
+            _bump(telemetry)
+        return _val_error_rates(
+            np.concatenate(preds, axis=1)[:self._k], yv)
+
+    def _averaged(self, params_k, beta_k, weights, telemetry,
+                  gossip_rounds=None):
         _bump(telemetry)
         _bump(telemetry, key="reduce_dispatches")
-        avg_cnn, avg_beta = _mesh_reduce(self.mesh, (params_k, beta_k),
-                                         self._weights_dev(weights))
+        w = self._weights_dev(weights)
+        if gossip_rounds is not None:
+            num, den = _mesh_gossip_state(
+                self.mesh, (params_k, beta_k), w, rounds=gossip_rounds)
+            den = np.asarray(den, np.float32)
+            read = lambda s, ref: jnp.asarray(
+                (np.asarray(s, np.float32).sum(axis=0) / den.sum()
+                 ).astype(ref.dtype))
+            num_cnn, num_beta = num
+            avg_cnn = jax.tree.map(read, num_cnn, params_k)
+            avg_beta = read(num_beta, beta_k)
+        else:
+            avg_cnn, avg_beta = _mesh_reduce(self.mesh,
+                                             (params_k, beta_k), w)
         return CNNELMModel(avg_cnn, avg_beta)
 
-    def _sync(self, params_k, weights):
-        return _mesh_sync(self.mesh, params_k, self._weights_dev(weights))
+    def _sync(self, params_k, weights, gossip_rounds=None):
+        w = self._weights_dev(weights)
+        if gossip_rounds is not None:
+            return _mesh_gossip_sync(self.mesh, params_k, w,
+                                     rounds=gossip_rounds)
+        return _mesh_sync(self.mesh, params_k, w)
 
     def e2lm_global_beta(self):
         """After ``execute``: the E²LM global readout — ONE

@@ -8,7 +8,9 @@ config objects instead of one 8-kwarg entry point.
                      shard_map-ed over a device mesh's 'pod' axis with a
                      one-all-reduce Reduce), kernel backend, mesh
                      placement, chunking, and THE member seed rule.
-* ``ReduceConfig`` — the Reduce strategy (uniform / shard-weighted /
+* ``ReduceConfig`` — the Reduce strategy (any
+                     ``repro.core.reduce_strategies`` registry entry:
+                     uniform / shard_weighted / boosted / gossip /
                      explicit weights) and ``rounds``: ``rounds > 1``
                      interleaves Map epochs with
                      ``broadcast_member_dim(average_member_dim(...))`` —
@@ -70,16 +72,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import run_state
-from repro.core import elastic, elm
+from repro.core import elastic, elm, reduce_strategies
 from repro.core.cnn_elm import (CNNELMModel, StackedMembers,  # noqa: F401
                                 stack_models)
 from repro.core.executor import (BACKENDS, CheckpointConfig,  # noqa: F401
                                  ExecutionPlan, make_executor)
+from repro.core.reduce_strategies import (ReduceContext,  # noqa: F401
+                                          ReduceStrategy)
 from repro.data.partition import Partition
 from repro.kernels import resolve_use_pallas
 from repro.models import cnn
 
-STRATEGIES = ("uniform", "shard_weighted")
 COMBINES = ("mean", "vote")
 SYNCS = ("rounds", "drift")
 
@@ -189,9 +192,23 @@ class ElasticSchedule:
 class ReduceConfig:
     """Reduce-phase configuration (Alg. 2 lines 18-20 + beyond-paper knobs).
 
-    ``strategy`` — ``"uniform"`` (the paper's mean), ``"shard_weighted"``
-    (weights = shard row counts: the exact expectation over unequal
-    partitions), or an explicit per-member weight sequence.
+    ``strategy`` — any ``repro.core.reduce_strategies`` entry: a
+    registered name (``"uniform"`` — the paper's mean,
+    ``"shard_weighted"`` — weights = shard row counts, ``"boosted"`` —
+    AdaBoost-style weights from held-out validation error, ``"gossip"``
+    — decentralized ring-consensus averaging), a ``ReduceStrategy``
+    INSTANCE (``Boosted(floor=...)``, ``Gossip(rounds=...)``,
+    ``ExplicitWeights((...,))``), or — deprecated — a bare per-member
+    weight sequence, normalised to ``ExplicitWeights`` under a
+    ``DeprecationWarning``. The resolved object is ``strategy_obj``.
+
+    ``validation`` — a held-out ``Partition`` scored by strategies that
+    weigh members by trained quality (``"boosted"``): after each round's
+    Map, every member predicts the slice (backend-native program: host
+    vmap or in-mesh shard_map) and the per-member error rates become the
+    averaging weights. Required by exactly those strategies and rejected
+    otherwise (a silently ignored slice would misreport what the weights
+    were computed from).
 
     ``rounds`` — how many averaging events the run's epochs split into.
     ``rounds=1``: train all epochs, average once (paper-faithful).
@@ -215,23 +232,36 @@ class ReduceConfig:
     weighted contribution in every later average). Under elastic
     membership the averaging weights are CUMULATIVE work —
     ``"uniform"`` counts rounds survived, ``"shard_weighted"`` rows
-    processed — so explicit weight sequences (whose length would change
-    mid-run) are rejected. Backends ``"sequential"`` and ``"stacked"``
-    (re-stacked per round block); needs ``rounds >= 2`` and SGD epochs."""
-    strategy: Union[str, Sequence[float]] = "uniform"
+    processed, ``"boosted"`` validation-quality alphas per block — so
+    strategies without ``elastic_ok`` (explicit weight sequences, whose
+    length would change mid-run, and gossip, whose ring topology has no
+    churn story) are rejected. Backends ``"sequential"`` and
+    ``"stacked"`` (re-stacked per round block); needs ``rounds >= 2``
+    and SGD epochs."""
+    strategy: Union[str, Sequence[float], ReduceStrategy] = "uniform"
     rounds: int = 1
     sync: str = "rounds"
     elastic: Optional[ElasticSchedule] = None
+    validation: Optional[Partition] = None
 
     def __post_init__(self):
-        if isinstance(self.strategy, str) and self.strategy not in STRATEGIES:
-            raise ValueError(f"strategy must be one of {STRATEGIES} or an "
-                             f"explicit weight sequence, got {self.strategy!r}")
+        strat = reduce_strategies.resolve(self.strategy, _warn_stacklevel=4)
+        object.__setattr__(self, "_strategy_obj", strat)
         if self.sync not in SYNCS:
             raise ValueError(f"sync must be one of {SYNCS}, "
                              f"got {self.sync!r}")
         if self.rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if strat.requires_validation and self.validation is None:
+            raise ValueError(
+                f"strategy {strat.name!r} weighs members by held-out "
+                f"validation error — pass "
+                f"ReduceConfig(validation=Partition(xv, yv))")
+        if self.validation is not None and not strat.requires_validation:
+            raise ValueError(
+                f"strategy {strat.name!r} does not score a validation "
+                f"slice — drop ReduceConfig.validation (it would be "
+                f"silently ignored)")
         if self.sync == "drift" and self.rounds != 1:
             raise ValueError(
                 "sync='drift' replaces the rounds cadence — leave rounds=1 "
@@ -242,11 +272,17 @@ class ReduceConfig:
         if self.elastic is not None:
             if not isinstance(self.elastic, ElasticSchedule):
                 raise ValueError("elastic must be an ElasticSchedule")
-            if not isinstance(self.strategy, str):
+            if not strat.elastic_ok:
+                if strat.name == "explicit":
+                    raise ValueError(
+                        "explicit weight sequences cannot follow membership "
+                        "changes — use 'uniform', 'shard_weighted' or "
+                        "'boosted' with an elastic schedule")
                 raise ValueError(
-                    "explicit weight sequences cannot follow membership "
-                    "changes — use 'uniform' or 'shard_weighted' with an "
-                    "elastic schedule")
+                    f"strategy {strat.name!r} does not extend to "
+                    f"membership churn (elastic_ok=False) — use "
+                    f"'uniform', 'shard_weighted' or 'boosted' with an "
+                    f"elastic schedule")
             if self.rounds < 2:
                 raise ValueError("an elastic schedule needs rounds >= 2 — "
                                  "events apply between rounds")
@@ -257,18 +293,22 @@ class ReduceConfig:
                     f"(rounds={self.rounds}; boundaries are "
                     f"0..{self.rounds - 2})")
 
+    @property
+    def strategy_obj(self) -> ReduceStrategy:
+        """The resolved ``ReduceStrategy`` behind ``strategy``."""
+        return self._strategy_obj
+
     def resolve_weights(self, partitions: Sequence[Partition]
                         ) -> Optional[List[float]]:
-        """None for uniform, shard row counts, or the explicit weights."""
-        if isinstance(self.strategy, str):
-            if self.strategy == "uniform":
-                return None
-            return [float(len(p.x)) for p in partitions]
-        w = [float(v) for v in self.strategy]
-        if len(w) != len(partitions):
-            raise ValueError(f"{len(w)} explicit weights for "
-                             f"{len(partitions)} partitions")
-        return w
+        """The static per-member weights for these partitions: None for
+        uniform, shard row counts, explicit weights, ... — whatever
+        ``strategy_obj.weights`` resolves from the partition shapes.
+        Strategies that weigh by trained-member quality (``boosted``)
+        cannot resolve statically — the runner routes them through the
+        per-round ``ExecutionPlan.weight_fn`` path instead."""
+        return self._strategy_obj.weights(ReduceContext(
+            num_members=len(partitions),
+            rows=tuple(len(p.x) for p in partitions)))
 
 
 # ---------------------------------------------------------------------------
@@ -475,7 +515,25 @@ class AveragingRun:
         if checkpoint is not None and \
                 not isinstance(checkpoint, CheckpointConfig):
             raise ValueError("checkpoint must be a CheckpointConfig")
-        weights = rc.resolve_weights(partitions)
+        strat = rc.strategy_obj
+        gossip_rounds = (strat.rounds if strat.combine == "gossip"
+                         else None)
+        weights = weight_fn = None
+        if strat.requires_validation:
+            # quality-weighted strategies resolve per ROUND from trained
+            # members: the executor hands weight_fn the round's lazy
+            # snapshot/val_errors closures (backend-native scoring)
+            rows = tuple(len(p.x) for p in partitions)
+            k = len(partitions)
+
+            def weight_fn(r, snapshot, val_errors):
+                return strat.weights(ReduceContext(
+                    num_members=k, rows=rows, round=r,
+                    val_errors=val_errors))
+        else:
+            weights = rc.resolve_weights(partitions)
+        validation = (None if rc.validation is None
+                      else (rc.validation.x, rc.validation.y))
         init = (cnn.init_params(self.cfg, key) if init_override is None
                 else init_override)
         telemetry: dict = {"dispatches": 0}
@@ -509,7 +567,8 @@ class AveragingRun:
             chunk_batches=m.chunk_batches, rounds=rc.rounds,
             reduce_weights=weights, on_round=on_round, telemetry=telemetry,
             checkpoint=checkpoint, start_round=start_round,
-            completed=completed)
+            completed=completed, weight_fn=weight_fn,
+            validation=validation, gossip_rounds=gossip_rounds)
         outcome = executor.execute(self.cfg, init, partitions, plan)
         return RunResult(self.cfg, outcome.members, state["avg"],
                          outcome.stacked, records,
@@ -591,9 +650,27 @@ class AveragingRun:
         t0 = time.perf_counter()
         init = cnn.init_params(self.cfg, key)
 
-        def round_weight(part: Partition) -> float:
-            return (float(len(part.x)) if rc.strategy == "shard_weighted"
-                    else 1.0)
+        strat = rc.strategy_obj
+
+        def block_weights(names, outcome) -> List[float]:
+            """Each member's weight for THIS round block — the increment
+            of its cumulative ``ElasticGroup`` mass (uniform: 1 per block
+            survived; shard_weighted: rows processed; boosted: the
+            validation-quality alpha of the member's block output, so a
+            leaver's retained contribution carries the quality of the
+            work it actually did)."""
+            rows = tuple(len(living[n].x) for n in names)
+            if strat.requires_validation:
+                errs = 1.0 - Ensemble.from_models(
+                    self.cfg, outcome.members).evaluate(
+                        rc.validation.x, rc.validation.y,
+                        use_pallas=m.use_pallas)
+                return strat.weights(ReduceContext(
+                    num_members=len(names), rows=rows,
+                    val_errors=lambda: np.asarray(errs, np.float64)))
+            w = strat.weights(ReduceContext(num_members=len(names),
+                                            rows=rows))
+            return [1.0] * len(names) if w is None else list(w)
 
         # id -> partition, schedule replayed in boundary order: member ids
         # are assigned by join order, so the replay reproduces the exact
@@ -649,10 +726,11 @@ class AveragingRun:
                               for n in names])
             outcome = executor.execute(self.cfg, cur_init,
                                        [living[n] for n in names], plan)
+            bw = block_weights(names, outcome)
             for i, n in enumerate(names):
                 model = outcome.members[i]
                 group.record_step(n, (model.cnn_params, model.beta),
-                                  n=round_weight(living[n]))
+                                  n=bw[i])
                 last_stats[n] = elm.ELMStats(
                     outcome.stats.u[i], outcome.stats.v[i],
                     outcome.stats.n[i])

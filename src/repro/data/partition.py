@@ -7,6 +7,10 @@
 ``partition_unequal`` — shuffle then split into explicit shard sizes: the
                         'training data distribution needs to be carefully
                         selected' regime the paper flags as its drawback.
+``partition_dirichlet``—Dirichlet(α) label-skew split: per-class member
+                        proportions drawn from Dir(α·1_k) — the tunable
+                        non-IID regime the pluggable Reduce strategies
+                        (boosted/gossip) are benchmarked on.
 
 ``batches`` is the streaming iterator (host loop, the faithful path);
 ``epoch_batch_arrays``/``stacked_epoch_batches`` materialise the SAME batch
@@ -81,6 +85,52 @@ def partition_unequal(x: np.ndarray, y: np.ndarray, sizes: Sequence[int],
         out.append(Partition(x[idx[at:at + s]], y[idx[at:at + s]]))
         at += s
     return out
+
+
+def partition_dirichlet(x: np.ndarray, y: np.ndarray, k: int,
+                        alpha: float, seed: int = 0,
+                        min_rows: int = 0) -> List[Partition]:
+    """Dirichlet(α) label-skew split — the standard non-IID benchmark
+    partitioner: for each class c, draw member proportions
+    ``p_c ~ Dirichlet(α·1_k)`` and scatter class c's rows over the k
+    members by those proportions. Every row lands in exactly ONE member
+    (rows conserved by construction); ``α → ∞`` recovers an IID-like
+    split while ``α → 0`` approaches one-class-per-member — the regime
+    where uniform averaging degrades most (see
+    ``benchmarks/reduce_strategies.py``).
+
+    Deterministic per ``seed``. ``min_rows > 0`` re-draws the whole
+    assignment under ``seed+1, seed+2, ...`` until every member holds at
+    least that many rows (α near 0 can starve a member) — still
+    deterministic, and the accepted attempt is a pure Dirichlet draw."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if not alpha > 0.0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    y = np.asarray(y)
+    if len(x) != len(y):
+        raise ValueError(f"{len(x)} rows of x for {len(y)} labels")
+    for attempt in range(100):
+        rng = np.random.default_rng(seed + attempt)
+        member_rows: List[List[int]] = [[] for _ in range(k)]
+        for c in np.unique(y):
+            rows = np.flatnonzero(y == c)
+            rng.shuffle(rows)
+            p = rng.dirichlet(np.full(k, float(alpha)))
+            cuts = np.round(np.cumsum(p)[:-1] * len(rows)).astype(int)
+            for m, part in enumerate(np.split(rows, cuts)):
+                member_rows[m].extend(part.tolist())
+        if all(len(r) >= min_rows for r in member_rows):
+            out = []
+            for r in member_rows:
+                idx = np.asarray(r, np.int64)
+                rng.shuffle(idx)       # no class-blocked row runs
+                out.append(Partition(x[idx], y[idx]))
+            return out
+    raise ValueError(
+        f"no Dirichlet(alpha={alpha}) draw in 100 attempts gave every "
+        f"member >= {min_rows} rows over {len(x)} rows / k={k} — lower "
+        f"min_rows or raise alpha")
 
 
 def batches(part: Partition, batch_size: int, seed: int = 0, epochs: int = 1,

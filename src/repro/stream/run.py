@@ -61,6 +61,7 @@ from repro.core import elm
 from repro.core.cnn_elm import (CNNELMModel, StackedMembers, _bump,
                                 average_models, stack_models)
 from repro.core.executor import CheckpointConfig, ExecutionPlan, make_executor
+from repro.core.reduce_strategies import ReduceContext
 from repro.core.runner import MapConfig, ReduceConfig
 from repro.data.partition import Partition
 from repro.kernels import resolve_use_pallas
@@ -285,6 +286,18 @@ class StreamingRun:
         if rc.elastic is not None:
             raise ValueError("elastic membership under streaming is not "
                              "supported — run fixed members")
+        strat = rc.strategy_obj
+        if strat.combine != "mean":
+            raise ValueError(
+                f"strategy {strat.name!r} is a batch-runner combine — "
+                f"streaming syncs publish one host average per event "
+                f"(average_models), not a ring program")
+        if strat.requires_validation:
+            raise ValueError(
+                f"strategy {strat.name!r} weighs members by a FIXED "
+                f"held-out slice, which a drifting stream does not have — "
+                f"streaming already weighs by window rows "
+                f"('shard_weighted') and scores prequentially")
 
     def run(self, streams: Sequence, key, *,
             checkpoint: Optional[CheckpointConfig] = None,
@@ -440,16 +453,12 @@ class StreamingRun:
             dispatches=telemetry["dispatches"], backend=m.backend)
 
     def _weights(self, windows) -> Optional[List[float]]:
-        """Reduce weights under streaming: ``shard_weighted`` weighs by
-        the rows currently IN each member's window (the streaming twin of
-        shard row counts); explicit sequences pass through."""
-        strat = self.reduce_cfg.strategy
-        if isinstance(strat, str):
-            if strat == "uniform":
-                return None
-            return [float(w.total().n) for w in windows]
-        w = [float(v) for v in strat]
-        if len(w) != len(windows):
-            raise ValueError(f"{len(w)} explicit weights for "
-                             f"{len(windows)} members")
-        return w
+        """Reduce weights under streaming, through the strategy registry:
+        ``shard_weighted`` weighs by the rows currently IN each member's
+        window (the streaming twin of shard row counts — the window
+        totals ride ``ReduceContext.rows``); explicit weight instances
+        pass through (length-checked against the member count)."""
+        return self.reduce_cfg.strategy_obj.weights(ReduceContext(
+            num_members=len(windows),
+            rows=tuple(int(w.total().n) for w in windows),
+            unit="members"))
